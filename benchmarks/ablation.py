@@ -1,0 +1,133 @@
+"""Beyond-paper ablations of PAOTA's power-control trade-off (eq. 25):
+
+  * solver ablation: exact water-filling vs the paper's Dinkelbach path vs
+    fixed beta corners (beta=1 staleness-only, beta=0 similarity-only,
+    beta=0.5) — measures how much the P2 optimization actually buys in
+    end-task accuracy, not just in the bound.
+  * partitioner ablation: paper's shard partition vs Dirichlet(0.3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import BenchSetting, build_world, run_algorithm
+from repro.fl import PAOTAConfig, PAOTAServer
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.fl.metrics import evaluate
+from repro.models.mlp import mlp_apply
+
+
+class _FixedBetaServer(PAOTAServer):
+    def __init__(self, *args, beta: float, **kw):
+        self._beta = beta
+        super().__init__(*args, **kw)
+
+    def round(self):
+        import repro.fl.server as srv_mod
+        from repro.core.dinkelbach import SolveResult
+
+        orig = srv_mod.solve_p2
+        beta = self._beta
+
+        def fixed(prob, method):
+            b = np.full(prob.K, beta)
+            return SolveResult(beta=b, objective=prob.objective(b),
+                               lam=0.0, iterations=0, inner=f"fixed{beta}")
+
+        srv_mod.solve_p2 = fixed
+        try:
+            return super().round()
+        finally:
+            srv_mod.solve_p2 = orig
+
+
+def run() -> list:
+    rows = []
+    s = BenchSetting.from_env(n_rounds=30)
+    clients, params, data = build_world(s)
+    x_tr, y_tr, x_te, y_te = data
+    chan = ChannelConfig(n0_dbm_hz=-74.0)   # noisy regime: power control matters
+
+    variants = {
+        "waterfill": lambda: PAOTAServer(
+            params, clients, chan, SchedulerConfig(n_clients=s.n_clients,
+                                                   seed=s.seed),
+            PAOTAConfig(solver="waterfill")),
+        "pgd": lambda: PAOTAServer(
+            params, clients, chan, SchedulerConfig(n_clients=s.n_clients,
+                                                   seed=s.seed),
+            PAOTAConfig(solver="pgd")),
+        "beta1_staleness_only": lambda: _FixedBetaServer(
+            params, clients, chan, SchedulerConfig(n_clients=s.n_clients,
+                                                   seed=s.seed),
+            PAOTAConfig(), beta=1.0),
+        "beta0_similarity_only": lambda: _FixedBetaServer(
+            params, clients, chan, SchedulerConfig(n_clients=s.n_clients,
+                                                   seed=s.seed),
+            PAOTAConfig(), beta=0.0),
+        "beta05_fixed": lambda: _FixedBetaServer(
+            params, clients, chan, SchedulerConfig(n_clients=s.n_clients,
+                                                   seed=s.seed),
+            PAOTAConfig(), beta=0.5),
+    }
+    for name, make in variants.items():
+        srv = make()
+        t0 = time.time()
+        for _ in range(s.n_rounds):
+            srv.round()
+        acc = evaluate(srv.global_params(), x_te, y_te, mlp_apply)["accuracy"]
+        rows.append({"name": f"ablation_{name}",
+                     "us_per_call": round((time.time() - t0) * 1e6 / s.n_rounds, 1),
+                     "derived": f"acc@{s.n_rounds}rounds={acc:.4f}"})
+
+    # partitioner ablation
+    from repro.data.partition import partition_dirichlet
+    from repro.data.pipeline import build_federation
+    from repro.fl import FLClient
+    from repro.models.mlp import mlp_loss
+    parts = partition_dirichlet(y_tr, n_clients=s.n_clients, alpha=0.3,
+                                seed=s.seed)
+    fed = build_federation(x_tr, y_tr, parts, seed=s.seed)
+    dcl = [FLClient(d, mlp_loss, batch_size=s.batch_size, lr=s.lr,
+                    local_steps=s.local_steps) for d in fed]
+    srv = PAOTAServer(params, dcl, chan,
+                      SchedulerConfig(n_clients=s.n_clients, seed=s.seed),
+                      PAOTAConfig(solver="waterfill"))
+    t0 = time.time()
+    for _ in range(s.n_rounds):
+        srv.round()
+    acc = evaluate(srv.global_params(), x_te, y_te, mlp_apply)["accuracy"]
+    rows.append({"name": "ablation_dirichlet_partition",
+                 "us_per_call": round((time.time() - t0) * 1e6 / s.n_rounds, 1),
+                 "derived": f"acc@{s.n_rounds}rounds={acc:.4f}"})
+    rows.extend(run_transmit_ablation())
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+
+
+def run_transmit_ablation() -> list:
+    """Model- vs delta-transmission under a channel harsh enough to break
+    the paper's full-model uplink (the failure mode recorded in §Repro)."""
+    rows = []
+    s = BenchSetting.from_env(n_rounds=25)
+    clients, params, data = build_world(s)
+    _, _, x_te, y_te = data
+    chan = ChannelConfig(n0_dbm_hz=-34.0)
+    for mode in ("model", "delta"):
+        srv = PAOTAServer(params, clients, chan,
+                          SchedulerConfig(n_clients=s.n_clients, seed=s.seed),
+                          PAOTAConfig(solver="waterfill", transmit=mode))
+        t0 = time.time()
+        for _ in range(s.n_rounds):
+            srv.round()
+        acc = evaluate(srv.global_params(), x_te, y_te, mlp_apply)["accuracy"]
+        rows.append({"name": f"ablation_transmit_{mode}_n0-34",
+                     "us_per_call": round((time.time() - t0) * 1e6 / s.n_rounds, 1),
+                     "derived": f"acc@{s.n_rounds}rounds={acc:.4f}"})
+    return rows

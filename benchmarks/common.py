@@ -1,0 +1,102 @@
+"""Shared harness for the paper-reproduction benchmarks (Fig. 3/4, Table I).
+
+Builds the federation once (synthetic MNIST-like, non-IID partition per
+Section IV-A) and runs PAOTA / Local SGD / COTAF servers, recording
+(round, simulated time, train loss, test accuracy) trajectories.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core import BoundConstants, ChannelConfig, SchedulerConfig, contraction_A
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation
+from repro.data.synthetic import get_dataset
+from repro.fl import (COTAFServer, FLClient, LocalSGDServer, PAOTAConfig,
+                      PAOTAServer, SyncConfig, evaluate)
+from repro.models.mlp import init_mlp_params, mlp_apply, mlp_loss
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+@dataclass
+class BenchSetting:
+    n_clients: int = 40          # paper: 100 (scaled for CPU wall-time;
+    n_rounds: int = 60           # REPRO_BENCH_FULL=1 restores 100)
+    n_select: int = 20           # sync baselines' participants per round
+    lr: float = 0.1
+    local_steps: int = 5         # M
+    batch_size: int = 32
+    delta_t: float = 8.0
+    n0_dbm_hz: float = -174.0
+    eval_every: int = 2
+    seed: int = 0
+    solver: str = "waterfill"
+
+    @classmethod
+    def from_env(cls, **kw):
+        s = cls(**kw)
+        if os.environ.get("REPRO_BENCH_FULL") == "1":
+            s.n_clients, s.n_rounds, s.n_select = 100, 120, 50
+        return s
+
+
+def build_world(s: BenchSetting):
+    x_tr, y_tr, x_te, y_te = get_dataset(n_train=max(200 * s.n_clients, 4000),
+                                         n_test=2000)
+    parts = partition_noniid(y_tr, n_clients=s.n_clients, seed=s.seed)
+    fed = build_federation(x_tr, y_tr, parts, seed=s.seed)
+    clients = [FLClient(d, mlp_loss, batch_size=s.batch_size, lr=s.lr,
+                        local_steps=s.local_steps) for d in fed]
+    params = init_mlp_params(jax.random.PRNGKey(s.seed))
+    return clients, params, (x_tr, y_tr, x_te, y_te)
+
+
+def train_loss(params, x, y, n: int = 4096) -> float:
+    import jax.numpy as jnp
+    sel = np.random.default_rng(0).choice(len(y), size=min(n, len(y)),
+                                          replace=False)
+    return float(mlp_loss(params, {"x": jnp.asarray(x[sel]),
+                                   "y": jnp.asarray(y[sel])}))
+
+
+def run_algorithm(name: str, s: BenchSetting, clients, params, data,
+                  seed_offset: int = 0) -> List[Dict]:
+    x_tr, y_tr, x_te, y_te = data
+    chan = ChannelConfig(n0_dbm_hz=s.n0_dbm_hz)
+    sched = SchedulerConfig(n_clients=s.n_clients, delta_t=s.delta_t,
+                            seed=s.seed + seed_offset)
+    if name == "paota":
+        srv = PAOTAServer(params, clients, chan, sched,
+                          PAOTAConfig(solver=s.solver, seed=s.seed))
+    elif name == "local_sgd":
+        srv = LocalSGDServer(params, clients, sched,
+                             SyncConfig(n_select=s.n_select, seed=s.seed))
+    elif name == "cotaf":
+        srv = COTAFServer(params, clients, sched,
+                          SyncConfig(n_select=s.n_select, seed=s.seed), chan)
+    else:
+        raise ValueError(name)
+
+    rows = []
+    t0 = time.time()
+    for r in range(s.n_rounds):
+        info = srv.round()
+        if r % s.eval_every == 0 or r == s.n_rounds - 1:
+            gp = srv.global_params()
+            ev = evaluate(gp, x_te, y_te, mlp_apply)
+            rows.append({
+                "algo": name, "round": info["round"],
+                "time": round(info["time"], 2),
+                "loss": round(train_loss(gp, x_tr, y_tr), 4),
+                "accuracy": round(ev["accuracy"], 4),
+                "test_loss": round(ev["loss"], 4),
+                "wall_s": round(time.time() - t0, 1),
+            })
+    return rows

@@ -1,0 +1,56 @@
+"""Roofline benchmark (deliverable g): reads the dry-run JSON records and
+emits one row per (arch x shape x mesh) with the three roofline terms in
+seconds, the dominant bottleneck, and the MODEL_FLOPS/HLO_FLOPs ratio.
+
+Run ``python -m repro.launch.dryrun --all --mesh both`` first (or rely on
+cached records under experiments/dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_OUT", "experiments/dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> list:
+    rows = []
+    for r in load_records():
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        if r.get("status") == "skipped":
+            rows.append({"name": name, "us_per_call": 0,
+                         "derived": f"skipped:{r.get('note', '')}"})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"name": name, "us_per_call": 0,
+                         "derived": f"ERROR:{r.get('note', '')[:80]}"})
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append({
+            "name": name,
+            "us_per_call": round(max(t["compute_s"], t["memory_s"],
+                                     t["collective_s"]) * 1e6, 2),
+            "derived": (f"compute={t['compute_s']:.3e}s;"
+                        f"memory={t['memory_s']:.3e}s;"
+                        f"collective={t['collective_s']:.3e}s;"
+                        f"dominant={t['dominant']};"
+                        f"useful_flops={'' if ratio is None else f'{ratio:.2f}'}"),
+        })
+    if not rows:
+        rows.append({"name": "roofline_missing", "us_per_call": 0,
+                     "derived": "no dry-run records; run repro.launch.dryrun"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

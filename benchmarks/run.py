@@ -1,0 +1,45 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bound    — Theorem-1 contraction + P2 gap terms (convergence machinery)
+  kernels  — aggregation/cosine/SWA kernel characteristics
+  roofline — per (arch x shape x mesh) roofline terms from the dry-run
+  fig3     — train-loss robustness vs noise (paper Fig. 3)
+  fig4     — test accuracy vs rounds/time (paper Fig. 4)
+  table1   — time/rounds to target accuracy (paper Table I)
+
+Env: REPRO_BENCH_FULL=1 for paper-scale (100 clients); default is a
+CPU-friendly scaled setting with identical structure.
+Select subsets: ``python -m benchmarks.run fig3 table1``
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+MODULES = ["bound", "kernels_bench", "roofline_bench", "fig3", "fig4",
+           "table1", "ablation"]
+ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench"}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or MODULES
+    wanted = [ALIASES.get(w, w) for w in wanted]
+    print("name,us_per_call,derived")
+    failed = []
+    for mod_name in wanted:
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for row in mod.run():
+                print(f"{row['name']},{row['us_per_call']},{row['derived']}",
+                      flush=True)
+        except Exception:
+            traceback.print_exc()
+            failed.append(mod_name)
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

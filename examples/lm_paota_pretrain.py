@@ -1,0 +1,87 @@
+"""PAOTA applied to transformer LM pre-training (datacenter mode): the
+paper's semi-async aggregation as the distribution layer for a causal LM.
+
+Runs the SAME paota train step the dry-run lowers — K simulated clients
+(data-parallel groups) each take M local SGD steps on their own token
+stream, then the AirComp weighted noisy aggregation merges them; straggler
+masks rotate to exercise the semi-async path. CPU-sized by default
+(reduced smollm ~= 5M params); --full uses the real 135M config.
+
+    PYTHONPATH=src python examples/lm_paota_pretrain.py --rounds 20
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.data.synthetic import token_stream
+from repro.launch.shapes import InputShape
+from repro.models import init_model
+from repro.models.transformer import loss_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=3)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mb", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
+    k, m = args.clients, args.local_steps
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (k,) + x.shape), params)
+
+    def local_sgd(p, mbs):
+        def sgd(p, mb):
+            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, mb, cfg)
+            return jax.tree_util.tree_map(lambda a, b: a - args.lr * b, p, g), l
+        return jax.lax.scan(sgd, p, mbs)
+
+    @jax.jit
+    def paota_round(stacked, batch, powers, mask, seed):
+        new_stacked, losses = jax.vmap(local_sgd)(stacked, batch)
+        bp = powers * mask
+        varsigma = jnp.maximum(jnp.sum(bp), 1e-12)
+
+        def agg(leaf):
+            s = jnp.einsum("k,k...->...", bp.astype(leaf.dtype), leaf)
+            return s / varsigma.astype(leaf.dtype)
+
+        def merge(a, local):
+            mm = mask.reshape((k,) + (1,) * (local.ndim - 1)).astype(local.dtype)
+            return mm * jnp.broadcast_to(a[None], local.shape) + (1 - mm) * local
+
+        agg_t = jax.tree_util.tree_map(agg, new_stacked)
+        return jax.tree_util.tree_map(merge, agg_t, new_stacked), jnp.mean(losses)
+
+    rng = np.random.default_rng(0)
+    stream = token_stream(cfg.vocab_size, k * m * args.mb, args.seq,
+                          args.rounds)
+    t0 = time.time()
+    for r, batch in enumerate(stream):
+        toks = batch["tokens"].reshape(k, m, args.mb, args.seq)
+        # semi-async: a rotating subset of clients misses the aggregation
+        mask = np.ones(k, np.float32)
+        mask[r % k] = 0.0
+        powers = np.full(k, 15.0, np.float32) * rng.uniform(0.6, 1.0, k).astype(np.float32)
+        stacked, loss = paota_round(stacked, {"tokens": jnp.asarray(toks)},
+                                    jnp.asarray(powers), jnp.asarray(mask),
+                                    jax.random.PRNGKey(r))
+        if r % 5 == 0 or r == args.rounds - 1:
+            print(f"round {r:3d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    print("done — loss should fall from ~ln(V) as the Markov stream is learned")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: PAOTA federated training on a synthetic non-IID MNIST-like
+task — 20 clients, 15 rounds, compares against ideal Local SGD.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation
+from repro.data.synthetic import get_dataset
+from repro.fl import (FLClient, LocalSGDServer, PAOTAConfig, PAOTAServer,
+                      SyncConfig, evaluate)
+from repro.models.mlp import init_mlp_params, mlp_apply, mlp_loss
+
+
+def main():
+    x_tr, y_tr, x_te, y_te = get_dataset(n_train=4000, n_test=1000)
+    parts = partition_noniid(y_tr, n_clients=20, seed=0)
+    fed = build_federation(x_tr, y_tr, parts)
+    clients = [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+               for d in fed]
+    params = init_mlp_params(jax.random.PRNGKey(0))
+
+    paota = PAOTAServer(params, clients, ChannelConfig(),
+                        SchedulerConfig(n_clients=20, seed=1),
+                        PAOTAConfig(solver="waterfill"))
+    sync = LocalSGDServer(params, clients, SchedulerConfig(n_clients=20, seed=2),
+                          SyncConfig(n_select=10))
+
+    print(f"{'round':>5} {'PAOTA acc':>10} {'PAOTA t(s)':>10} "
+          f"{'LocalSGD acc':>13} {'LocalSGD t(s)':>13}")
+    for r in range(15):
+        paota.round()
+        sync.round()
+        if r % 3 == 2:
+            a1 = evaluate(paota.global_params(), x_te, y_te, mlp_apply)
+            a2 = evaluate(sync.global_params(), x_te, y_te, mlp_apply)
+            print(f"{r:>5} {a1['accuracy']:>10.3f} {paota.scheduler.time:>10.1f} "
+                  f"{a2['accuracy']:>13.3f} {sync.time:>13.1f}")
+    print("\nPAOTA fixed-period rounds vs sync straggler-bound rounds — "
+          "same takeaway as paper Fig. 4 / Table I.")
+
+
+if __name__ == "__main__":
+    main()

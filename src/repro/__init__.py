@@ -1,0 +1,1 @@
+"""PAOTA: semi-asynchronous federated edge learning via over-the-air computation — production-grade JAX reproduction (see README.md)."""

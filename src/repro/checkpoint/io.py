@@ -1,0 +1,43 @@
+"""npz-based distributed-agnostic checkpointing: the pytree is flattened to
+path-keyed arrays; restore rebuilds against a template tree (so sharding /
+device placement is the caller's choice). Atomic via temp-file rename."""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0, extra: dict = None):
+    arrays = {f"arr_{i}": np.asarray(v) for i, (_, v) in enumerate(_paths(tree))}
+    index = {"keys": [k for k, _ in _paths(tree)], "step": step,
+             "extra": extra or {}}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    os.close(fd)
+    np.savez(tmp, __index__=json.dumps(index), **arrays)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, template: Any):
+    z = np.load(path, allow_pickle=False)
+    index = json.loads(str(z["__index__"]))
+    leaves_t, treedef = jax.tree_util.tree_flatten(template)
+    arrays = [z[f"arr_{i}"] for i in range(len(leaves_t))]
+    restored = [np.asarray(a, dtype=np.asarray(t).dtype)
+                for a, t in zip(arrays, leaves_t)]
+    return (jax.tree_util.tree_unflatten(treedef, restored),
+            index["step"], index["extra"])

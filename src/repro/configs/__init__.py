@@ -1,0 +1,50 @@
+"""Registry of assigned architectures (public pool) + the paper's own model.
+
+``get_config("<arch-id>")`` accepts the dashed ids from the assignment
+(e.g. "llama4-maverick-400b-a17b") and returns the exact published config;
+``get_reduced("<arch-id>")`` returns the smoke-test variant (<=2 layers,
+d_model<=128, <=4 experts).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_MODULES = {
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "olmo-1b": "repro.configs.olmo_1b",
+    "internvl2-1b": "repro.configs.internvl2_1b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def _norm(name: str) -> str:
+    return name.replace("_", "-")
+
+
+def get_config(name: str) -> ModelConfig:
+    key = _norm(name)
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[key]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    key = _norm(name)
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[key]).REDUCED
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,31 @@
+"""hubert-xlarge [audio] — encoder-only, wav2vec2-style backbone.
+[arXiv:2106.07447] 48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504
+(k-means codebook targets).
+
+Audio frontend (mel-spectrogram + conv feature extractor) is a STUB per
+instructions: input_specs() provides precomputed 512-d frame features.
+Encoder-only: decode_32k / long_500k are skipped (no decode step) —
+recorded in DESIGN.md §4.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    encoder_only=True,
+    modality="audio",
+    frontend_dim=512,     # conv feature extractor output dim (stubbed)
+    mask_prob=0.08,
+    tie_embeddings=False,
+    source="arXiv:2106.07447 (HuBERT X-Large)",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,29 @@
+"""llama4-maverick-400b-a17b [moe] — MoE, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E] (assigned spec: 48L d_model=5120 40H
+GQA kv=8 d_ff=8192 vocab=202048, MoE 128 experts top-1).
+
+long_500k: full-attention MoE — run with the framework's sliding-window
+variant (sliding_window=8192 override applied by launch.shapes for that
+shape only; flagged beyond-paper, see DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=128,
+    experts_per_token=1,
+    moe_layer_period=1,
+    tie_embeddings=False,
+    rope_theta=500000.0,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (assigned pool spec)",
+)
+
+REDUCED = CONFIG.reduced()

@@ -1,0 +1,20 @@
+"""The paper's own experiment model (Section IV-A): an MLP with two hidden
+layers of 10 nodes for 10-class 28x28 digit classification, trained by the
+FL runtime (repro.fl) on the non-IID federation.
+
+Not part of the transformer zoo — exposed here so every model the framework
+trains has a config module. Build with repro.models.mlp.init_mlp_params.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class MLPConfig:
+    d_in: int = 784          # 28x28
+    hidden: int = 10         # "two hidden layers with 10 nodes"
+    n_layers: int = 2
+    n_classes: int = 10
+    source: str = "PAOTA paper Sec. IV-A (MLP on MNIST)"
+
+
+CONFIG = MLPConfig()

@@ -1,0 +1,66 @@
+"""PAOTA aggregation — the paper's round update (eq. 8/9) in two forms:
+
+1. ``paota_aggregate_stacked``: the FL-simulator form. Client models stacked
+   as a (K, D) matrix; fused weighted sum + channel noise + normalization
+   (optionally via the Pallas ``aircomp_sum`` kernel).
+
+2. ``paota_allreduce``: the datacenter/shard_map form. Each device group on
+   the client mesh axis holds ONE client's payload; the AirComp superposition
+   becomes a masked weighted ``psum`` over that axis with AWGN injected after
+   normalization — the TPU-native realization of the wireless MAC
+   (DESIGN.md §3). Used by repro.launch.train's PAOTA round step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.core.aircomp import aircomp_aggregate
+
+
+def ravel(params) -> Tuple[jnp.ndarray, callable]:
+    return ravel_pytree(params)
+
+
+def paota_aggregate_stacked(stacked_models: jnp.ndarray, powers: jnp.ndarray,
+                            mask: jnp.ndarray, key, sigma_n: float,
+                            use_kernel: bool = False):
+    """Eq. (8): w_g^{r+1} = (sum_k b_k p_k w_k + n) / sum_k b_k p_k."""
+    return aircomp_aggregate(stacked_models, powers, mask, key, sigma_n,
+                             use_kernel=use_kernel)
+
+
+def paota_allreduce(local_payload, power: jnp.ndarray, ready: jnp.ndarray,
+                    axis_name, noise_key, sigma_n: float):
+    """Inside shard_map: each participant holds `local_payload` (pytree),
+    scalar `power` (p_k) and `ready` (b_k in {0,1}).
+
+    Returns the PAOTA aggregate, identical on every participant — a weighted
+    masked all-reduce with post-normalization AWGN. The noise is generated
+    from a shared key so every device injects the SAME realization (one
+    channel, one noise draw — matches eq. 6 where noise is added once at the
+    server, not per client).
+    """
+    bp = power * ready
+    varsigma = jnp.maximum(jax.lax.psum(bp, axis_name), 1e-12)
+
+    def agg(x):
+        s = jax.lax.psum(x * bp.astype(x.dtype), axis_name)
+        sub = jax.random.fold_in(noise_key, x.ndim + x.size % 9973)
+        noise = sigma_n * jax.random.normal(sub, x.shape, x.dtype)
+        return (s + noise) / varsigma.astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, local_payload)
+
+
+def exact_average(local_payload, weight: jnp.ndarray, axis_name):
+    """Ideal Local SGD aggregation (baseline 1): lossless weighted mean."""
+    wsum = jax.lax.psum(weight, axis_name)
+
+    def agg(x):
+        return jax.lax.psum(x * weight.astype(x.dtype), axis_name) / wsum.astype(x.dtype)
+
+    return jax.tree_util.tree_map(agg, local_payload)

@@ -1,0 +1,122 @@
+"""Power-control optimization — Section III-B.
+
+The transmit power of client k trades off staleness vs gradient similarity
+(eq. 25):
+
+    p_k = p_max_k * ( beta_k * rho_k + (1 - beta_k) * theta_k )
+    rho_k   = Omega / (s_k + Omega)                      (staleness factor)
+    theta_k = (cos(dw_k, w_g^t - w_g^{t-1}) + 1) / 2     (similarity factor)
+
+Minimizing the controllable part of the convergence bound G^r (Theorem 1,
+terms (d)+(e)) over beta in [0,1]^K is the fractional program P2:
+
+    min_beta  h1(beta)/h2(beta)
+    h1 = L eps^2 K * sum_k b_k p_k^2 + 2 L d sigma_n^2      (term d + e numer.)
+    h2 = (sum_k b_k p_k)^2                                  (normalizer^2)
+
+with p = P_max (theta + D beta), D = diag(rho - theta) — both h1 and h2 are
+convex quadratics in beta, exactly the paper's P2 structure (their G is the
+diagonal L eps^2 K * diag(b) instance, their Q the rank-one b b^T instance).
+
+Solvers (repro.core.dinkelbach): the paper-faithful Dinkelbach loop with a
+piecewise-linear 0-1 MIP inner step (repro.core.milp — CPLEX replaced by a
+pure-python branch & bound), plus two beyond-paper inner solvers validated
+against it (projected gradient, and an exact KKT water-filling solver that
+exploits the diagonal+rank-one structure; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def staleness_factor(s, omega: float):
+    """rho_k = Omega / (s_k + Omega); s_k = rounds the model is stale."""
+    return omega / (s + omega)
+
+
+def similarity_factor(cos_sim):
+    """theta_k = (cos + 1)/2 in [0, 1]."""
+    return (cos_sim + 1.0) / 2.0
+
+
+def cosine_similarity(deltas, global_dir, use_kernel: bool = False, eps=1e-12):
+    """cos(dw_k, g) for stacked deltas (K, D) vs g (D,)."""
+    if use_kernel:
+        from repro.kernels.ops import cosine_sim
+        return cosine_sim(deltas, global_dir)
+    num = deltas @ global_dir
+    den = jnp.sqrt(jnp.maximum(jnp.sum(deltas * deltas, -1), eps)
+                   * jnp.maximum(jnp.sum(global_dir * global_dir), eps))
+    return num / den
+
+
+def power_from_beta(beta, rho, theta, p_max):
+    """Eq. (25). All (K,) vectors; result clipped to [0, p_max] (cond. 7)."""
+    p = p_max * (beta * rho + (1.0 - beta) * theta)
+    return jnp.clip(p, 0.0, p_max)
+
+
+@dataclass(frozen=True)
+class P2Problem:
+    """Quadratic-ratio data for P2 (all numpy, solver-side)."""
+    rho: np.ndarray      # (K,)
+    theta: np.ndarray    # (K,)
+    p_max: np.ndarray    # (K,)
+    b: np.ndarray        # (K,) in {0,1}
+    c1: float            # L * eps^2 * K      (term-d scale)
+    c0: float            # 2 * L * d * sigma_n^2  (term-e numerator)
+
+    @property
+    def K(self) -> int:
+        return len(self.rho)
+
+    def power(self, beta: np.ndarray) -> np.ndarray:
+        p = self.p_max * (beta * self.rho + (1 - beta) * self.theta)
+        return np.clip(p, 0.0, self.p_max)
+
+    def h1(self, beta: np.ndarray) -> float:
+        p = self.power(beta) * self.b
+        return float(self.c1 * np.sum(p * p) + self.c0)
+
+    def h2(self, beta: np.ndarray) -> float:
+        p = self.power(beta) * self.b
+        s = np.sum(p)
+        return float(s * s)
+
+    def objective(self, beta: np.ndarray) -> float:
+        """P2: h1/h2 (minimize). Equivalently maximize h2/h1 (P3 form)."""
+        return self.h1(beta) / max(self.h2(beta), 1e-30)
+
+    # ---- quadratic-form coefficients (paper's G, g, g0, Q, q, q0) ----
+    def quadratics(self):
+        """h1 = b'Gb + g'b + g0 ; h2 = b'Qb + q'b + q0 over beta (unclipped)."""
+        pm, th, d = self.p_max, self.theta, (self.rho - self.theta)
+        m = self.b.astype(float)
+        # p_k = pm_k (th_k + d_k beta_k); active entries only
+        A = pm * d * np.sqrt(m)            # sqrt-mask keeps G diagonal PSD
+        Bc = pm * th * np.sqrt(m)
+        G = self.c1 * np.diag(A * A)
+        g = 2 * self.c1 * A * Bc
+        g0 = self.c1 * float(Bc @ Bc) + self.c0
+        u = pm * d * m
+        v = pm * th * m
+        Q = np.outer(u, u)
+        q = 2 * float(np.sum(v)) * u
+        q0 = float(np.sum(v)) ** 2
+        return (G, g, g0), (Q, q, q0)
+
+
+def build_p2(rho, theta, p_max, b, *, smooth_l: float, eps_bound: float,
+             model_dim: int, sigma_n2: float) -> P2Problem:
+    """Assemble P2 from Theorem-1 constants: c1 = L eps^2 K, c0 = 2 L d sigma^2."""
+    rho = np.asarray(rho, float)
+    k = len(rho)
+    return P2Problem(
+        rho=rho, theta=np.asarray(theta, float),
+        p_max=np.asarray(p_max, float), b=np.asarray(b, float),
+        c1=smooth_l * eps_bound ** 2 * k,
+        c0=2.0 * smooth_l * model_dim * sigma_n2,
+    )

@@ -1,0 +1,86 @@
+"""Time-triggered semi-asynchronous scheduler — Section II-B, Fig. 2.
+
+Simulates K edge devices with heterogeneous compute latency. Global
+aggregation fires every ``delta_t`` seconds (periodic, fixed interval). A
+client whose local training (M SGD steps) finishes inside the period sets
+its ready bit b_k = 1 and uploads at the next aggregation slot; stragglers
+keep training their stale model and join a later round with staleness
+s_k = (current round) - (round whose global model they trained from).
+
+Latency model (Section IV-A): per-session compute time ~ U(lat_lo, lat_hi)
+seconds (default U(5,15)); PAOTA period delta_t = 8 s. For the synchronous
+baselines the round time is max over participating clients (bottleneck
+node) — that asymmetry is exactly what Table I measures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class ClientState:
+    ready: bool = True            # b_k: finished, waiting for aggregation slot
+    busy_until: float = 0.0       # sim time when local training finishes
+    model_round: int = 0          # round of the global model it trains on
+    staleness: int = 0            # s_k at upload time
+
+
+@dataclass
+class SchedulerConfig:
+    n_clients: int = 100
+    delta_t: float = 8.0
+    lat_lo: float = 5.0
+    lat_hi: float = 15.0
+    seed: int = 0
+
+
+class SemiAsyncScheduler:
+    """Event-driven simulation of PAOTA's periodic aggregation."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.time = 0.0
+        self.round = 0
+        self.clients: List[ClientState] = [ClientState() for _ in range(cfg.n_clients)]
+
+    def _draw_latency(self, size=None):
+        return self.rng.uniform(self.cfg.lat_lo, self.cfg.lat_hi, size)
+
+    def start_round(self, participant_ids):
+        """Broadcast: clients in `participant_ids` receive w_g^r and begin
+        local training; each gets a fresh latency draw."""
+        for k in participant_ids:
+            c = self.clients[k]
+            c.ready = False
+            c.model_round = self.round
+            c.busy_until = self.time + float(self._draw_latency())
+
+    def advance_to_aggregation(self):
+        """Advance sim clock by delta_t; returns (uploaders, staleness array).
+
+        uploaders: indices with b_k = 1 at the aggregation slot (finished
+        local training during this period). staleness[k] = s_k^r.
+        """
+        self.time += self.cfg.delta_t
+        uploaders = []
+        stal = np.zeros(self.cfg.n_clients, dtype=np.int64)
+        for k, c in enumerate(self.clients):
+            if not c.ready and c.busy_until <= self.time:
+                c.ready = True
+                c.staleness = self.round - c.model_round
+            if c.ready:
+                uploaders.append(k)
+                stal[k] = self.round - c.model_round
+        self.round += 1
+        return np.array(uploaders, dtype=np.int64), stal
+
+    # ------------------------------------------------------------------
+    # synchronous baselines' clock (Local SGD / COTAF): wait for stragglers
+    # ------------------------------------------------------------------
+    def sync_round_time(self, n_participants: int) -> float:
+        """Round duration = max of n participant latency draws (bottleneck)."""
+        return float(np.max(self._draw_latency(n_participants)))

@@ -1,0 +1,38 @@
+"""Minibatch pipeline for federated clients: deterministic, stateless
+shuffled batching (reshuffle each epoch from a fold-in seed)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientData:
+    """One client's local dataset D_k with an epoch-shuffled batch iterator."""
+
+    def __init__(self, x: np.ndarray, y: np.ndarray, client_id: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.client_id = client_id
+        self._seed = seed
+        self._epoch = 0
+
+    def __len__(self):
+        return len(self.y)
+
+    def batches(self, batch_size: int, n_batches: int):
+        """Yield n_batches minibatches, cycling+reshuffling as needed."""
+        rng = np.random.default_rng((self._seed, self.client_id, self._epoch))
+        order = rng.permutation(len(self.y))
+        i = 0
+        for _ in range(n_batches):
+            if i + batch_size > len(order):
+                self._epoch += 1
+                rng = np.random.default_rng(
+                    (self._seed, self.client_id, self._epoch))
+                order = rng.permutation(len(self.y))
+                i = 0
+            sel = order[i:i + batch_size]
+            i += batch_size
+            yield {"x": self.x[sel], "y": self.y[sel]}
+
+
+def build_federation(x, y, parts, seed: int = 0):
+    return [ClientData(x[p], y[p], k, seed) for k, p in enumerate(parts)]

@@ -1,0 +1,110 @@
+"""Baselines from Section IV-B:
+
+(1) Local SGD [McMahan et al., AISTATS'17] — ideal synchronous FedAvg:
+    lossless transmission, exact D_k/D-weighted average; round time is the
+    MAX participant latency (bottleneck node — this is what PAOTA beats on
+    wall-clock).
+
+(2) COTAF [Sery & Cohen, TSP'20] — synchronous AirComp: clients transmit
+    model UPDATES through the MAC with time-varying precoding
+    alpha_t = P / max_k ||dw_k||^2 so the strongest update meets the power
+    budget; the server receives the superposition plus AWGN scaled by
+    1/(K sqrt(alpha_t)).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aircomp import ChannelConfig
+from repro.core.aggregation import ravel
+from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
+
+
+@dataclass
+class SyncConfig:
+    n_select: int = 50           # participants per round (fairness: matched
+    seed: int = 0                # to PAOTA's mean participation)
+
+
+class _SyncServerBase:
+    def __init__(self, init_params, clients: List, sched_cfg: SchedulerConfig,
+                 cfg: SyncConfig):
+        self.clients = clients
+        self.cfg = cfg
+        self.scheduler = SemiAsyncScheduler(sched_cfg)
+        vec, self.unravel = ravel(init_params)
+        self.global_vec = np.asarray(vec)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.time = 0.0
+        self.round_idx = 0
+        self.history: List[dict] = []
+
+    def global_params(self):
+        return self.unravel(jnp.asarray(self.global_vec))
+
+    def _select(self):
+        n = min(self.cfg.n_select, len(self.clients))
+        return self.rng.choice(len(self.clients), size=n, replace=False)
+
+    def _train_selected(self, sel):
+        params = self.unravel(jnp.asarray(self.global_vec))
+        outs, weights = [], []
+        for k in sel:
+            trained = self.clients[k].local_train(params)
+            tv, _ = ravel(trained)
+            outs.append(np.asarray(tv))
+            weights.append(self.clients[k].n_samples)
+        return np.stack(outs), np.asarray(weights, float)
+
+    def _advance_clock(self, n):
+        # synchronous: wait for the slowest selected client (bottleneck)
+        self.time += self.scheduler.sync_round_time(n)
+        self.round_idx += 1
+
+
+class LocalSGDServer(_SyncServerBase):
+    """Ideal synchronous FedAvg (no transmission loss)."""
+
+    def round(self) -> dict:
+        sel = self._select()
+        stacked, w = self._train_selected(sel)
+        w = w / w.sum()
+        self.global_vec = w @ stacked
+        self._advance_clock(len(sel))
+        info = {"round": self.round_idx, "time": self.time,
+                "n_participants": len(sel)}
+        self.history.append(info)
+        return info
+
+
+class COTAFServer(_SyncServerBase):
+    """Synchronous AirComp with time-varying precoding [3]."""
+
+    def __init__(self, init_params, clients, sched_cfg, cfg: SyncConfig,
+                 chan: ChannelConfig):
+        super().__init__(init_params, clients, sched_cfg, cfg)
+        self.chan = chan
+        self.key = jax.random.PRNGKey(cfg.seed + 77)
+
+    def round(self) -> dict:
+        sel = self._select()
+        stacked, _ = self._train_selected(sel)
+        deltas = stacked - self.global_vec[None, :]
+        k = len(sel)
+        # precoding: scale so max-energy update meets the power budget
+        max_e = max(float(np.max(np.sum(deltas * deltas, axis=1))), 1e-12)
+        alpha_t = self.chan.p_max_watts / max_e
+        self.key, sub = jax.random.split(self.key)
+        noise = (self.chan.sigma_n / (k * np.sqrt(alpha_t))
+                 * np.asarray(jax.random.normal(sub, (deltas.shape[1],))))
+        self.global_vec = self.global_vec + deltas.mean(axis=0) + noise
+        self._advance_clock(k)
+        info = {"round": self.round_idx, "time": self.time,
+                "n_participants": k, "alpha_t": alpha_t}
+        self.history.append(info)
+        return info

@@ -1,0 +1,39 @@
+"""Edge-device client: M local SGD steps from a received global model
+(eq. 3 / eq. 4 — the staleness bookkeeping lives in the scheduler; the
+client always trains from whatever global model it last received)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import ClientData
+
+
+class FLClient:
+    def __init__(self, data: ClientData, loss_fn: Callable,
+                 batch_size: int = 32, lr: float = 0.05, local_steps: int = 5):
+        self.data = data
+        self.loss_fn = loss_fn
+        self.batch_size = batch_size
+        self.lr = lr
+        self.local_steps = local_steps
+        self._step = jax.jit(self._sgd_step)
+
+    def _sgd_step(self, params, batch):
+        g = jax.grad(self.loss_fn)(params, batch)
+        return jax.tree_util.tree_map(lambda p, gg: p - self.lr * gg, params, g)
+
+    def local_train(self, params):
+        """w_k = w_g - eta * sum_m grad F_k (eq. 3): M minibatch SGD steps."""
+        for batch in self.data.batches(self.batch_size, self.local_steps):
+            jb = {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])}
+            params = self._step(params, jb)
+        return params
+
+    @property
+    def n_samples(self) -> int:
+        return len(self.data)

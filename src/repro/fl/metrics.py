@@ -1,0 +1,46 @@
+"""Evaluation + experiment recording for the FL experiments."""
+from __future__ import annotations
+
+import csv
+import os
+from typing import Callable, List
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def evaluate(params, x_test: np.ndarray, y_test: np.ndarray,
+             apply_fn: Callable, batch: int = 1024) -> dict:
+    correct, total, loss_sum = 0, 0, 0.0
+    for i in range(0, len(y_test), batch):
+        xb = jnp.asarray(x_test[i:i + batch])
+        yb = y_test[i:i + batch]
+        logits = np.asarray(apply_fn(params, xb))
+        pred = logits.argmax(-1)
+        correct += int((pred == yb).sum())
+        lse = np.log(np.exp(logits - logits.max(-1, keepdims=True)).sum(-1)) \
+            + logits.max(-1)
+        loss_sum += float((lse - logits[np.arange(len(yb)), yb]).sum())
+        total += len(yb)
+    return {"accuracy": correct / total, "loss": loss_sum / total}
+
+
+def time_to_accuracy(history: List[dict], targets=(0.5, 0.6, 0.7, 0.8)):
+    """Table I: first (round, time) reaching each target accuracy."""
+    out = {}
+    for tgt in targets:
+        hit = next((h for h in history if h.get("accuracy", 0) >= tgt), None)
+        out[tgt] = (hit["round"], hit["time"]) if hit else (None, None)
+    return out
+
+
+def write_csv(path: str, rows: List[dict]):
+    if not rows:
+        return
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    keys = sorted({k for r in rows for k in r})
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)

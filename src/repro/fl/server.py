@@ -1,0 +1,149 @@
+"""PAOTA server — Algorithm 1.
+
+Per aggregation period (every delta_t seconds of simulated time):
+  1. collect uploads from clients whose local training finished (b_k=1),
+     with staleness s_k;
+  2. compute staleness factors rho_k (eq. 25) and gradient-similarity
+     factors theta_k = (cos(dw_k, w_g^t - w_g^{t-1}) + 1)/2;
+  3. solve P2 for beta (Dinkelbach/MILP, PGD, or exact water-filling) and
+     set transmit powers p_k = p_max(beta_k rho_k + (1-beta_k) theta_k),
+     clipped by the instantaneous power constraint (7);
+  4. AirComp-aggregate the stacked local models with AWGN (eqs. 6+8);
+  5. broadcast w_g^{r+1} to the uploaders, who restart local training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aircomp import (ChannelConfig, effective_power_cap,
+                                sample_channel_gains)
+from repro.core.aggregation import paota_aggregate_stacked, ravel
+from repro.core.dinkelbach import solve_p2
+from repro.core.power_control import (build_p2, cosine_similarity,
+                                      similarity_factor, staleness_factor)
+from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
+
+
+@dataclass
+class PAOTAConfig:
+    omega: float = 3.0            # staleness constant Omega (Sec. IV-A)
+    solver: str = "waterfill"     # p2 solver: waterfill|pgd|milp|exhaustive
+    smooth_l: float = 10.0        # L (Sec. IV-A)
+    eps_bound: float = 0.05       # epsilon (Assumption 3)
+    use_kernel: bool = False      # route aggregation through Pallas kernel
+    transmit: str = "model"       # "model" (paper, eq. 6: clients transmit
+                                  # w_k) | "delta" (beyond-paper: transmit
+                                  # local updates; the power constraint (7)
+                                  # then caps p by the much smaller ||dw||,
+                                  # restoring SNR in harsh channels — see
+                                  # EXPERIMENTS.md §Repro notes + ablation)
+    seed: int = 0
+
+
+class PAOTAServer:
+    def __init__(self, init_params, clients: List, chan: ChannelConfig,
+                 sched_cfg: SchedulerConfig, cfg: PAOTAConfig):
+        self.clients = clients
+        self.chan = chan
+        self.cfg = cfg
+        self.scheduler = SemiAsyncScheduler(sched_cfg)
+        vec, self.unravel = ravel(init_params)
+        self.global_vec = np.asarray(vec)
+        self.prev_global = self.global_vec.copy()
+        self.d = len(self.global_vec)
+        self.key = jax.random.PRNGKey(cfg.seed)
+        # in-flight local results: client -> (uploaded model vec, start vec)
+        self._pending: Dict[int, tuple] = {}
+        self._kick_off(list(range(len(clients))))
+        self.history: List[dict] = []
+
+    # ------------------------------------------------------------------
+    def _kick_off(self, ids):
+        """Broadcast current global model to `ids`; precompute their local
+        training result (deterministic — consumed when their latency ends)."""
+        start = self.global_vec.copy()
+        params = self.unravel(jnp.asarray(start))
+        self.scheduler.start_round(ids)
+        for k in ids:
+            trained = self.clients[k].local_train(params)
+            tv, _ = ravel(trained)
+            self._pending[k] = (np.asarray(tv), start)
+
+    def global_params(self):
+        return self.unravel(jnp.asarray(self.global_vec))
+
+    # ------------------------------------------------------------------
+    def round(self) -> dict:
+        upl, stal = self.scheduler.advance_to_aggregation()
+        k_tot = len(self.clients)
+        b = np.zeros(k_tot)
+        b[upl] = 1.0
+
+        stacked = np.stack([self._pending[k][0] if k in self._pending
+                            else self.global_vec for k in range(k_tot)])
+        starts = np.stack([self._pending[k][1] if k in self._pending
+                           else self.global_vec for k in range(k_tot)])
+        deltas = stacked - starts
+
+        # similarity factor vs last global direction (eq. 25)
+        gdir = self.global_vec - self.prev_global
+        if np.linalg.norm(gdir) < 1e-12:
+            cos = np.zeros(k_tot)
+        else:
+            cos = np.asarray(cosine_similarity(jnp.asarray(deltas),
+                                               jnp.asarray(gdir),
+                                               use_kernel=self.cfg.use_kernel))
+        theta = np.asarray(similarity_factor(cos))
+        rho = np.asarray(staleness_factor(stal.astype(float), self.cfg.omega))
+
+        # P2 -> beta -> powers
+        p_max = np.full(k_tot, self.chan.p_max_watts)
+        prob = build_p2(rho, theta, p_max, b, smooth_l=self.cfg.smooth_l,
+                        eps_bound=self.cfg.eps_bound, model_dim=self.d,
+                        sigma_n2=self.chan.sigma_n2)
+        res = solve_p2(prob, self.cfg.solver)
+        powers = prob.power(res.beta)
+
+        # payload: full models (paper, eq. 6) or local updates (beyond-paper)
+        payload = deltas if self.cfg.transmit == "delta" else stacked
+
+        # instantaneous power constraint (7) under the sampled channel
+        self.key, sub = jax.random.split(self.key)
+        h = np.asarray(sample_channel_gains(sub, k_tot, self.chan))
+        w_norm2 = np.sum(payload.astype(np.float64) ** 2, axis=1)
+        cap = np.asarray(effective_power_cap(jnp.asarray(w_norm2),
+                                             jnp.asarray(h),
+                                             self.chan.p_max_watts))
+        powers = np.minimum(powers, cap)
+
+        # AirComp aggregation (eqs. 6+8)
+        self.key, sub = jax.random.split(self.key)
+        agg, varsigma = paota_aggregate_stacked(
+            jnp.asarray(payload), jnp.asarray(powers), jnp.asarray(b), sub,
+            self.chan.sigma_n, use_kernel=self.cfg.use_kernel)
+        self.prev_global = self.global_vec
+        if self.cfg.transmit == "delta":
+            # w^{r+1} = w^r + sum_k alpha_k dw_k + n/varsigma
+            self.global_vec = self.global_vec + np.asarray(agg)
+        else:
+            self.global_vec = np.asarray(agg)
+
+        # uploaders receive the new model and restart (Fig. 2 workflow)
+        for k in upl:
+            self._pending.pop(k, None)
+        self._kick_off(list(upl))
+
+        info = {"round": self.scheduler.round - 1,
+                "time": self.scheduler.time,
+                "n_participants": int(b.sum()),
+                "mean_staleness": float(stal[upl].mean()) if len(upl) else 0.0,
+                "beta_mean": float(np.mean(res.beta[b > 0])) if b.sum() else 0.0,
+                "varsigma": float(varsigma),
+                "p2_objective": res.objective}
+        self.history.append(info)
+        return info

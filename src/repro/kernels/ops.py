@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python/XLA-CPU); on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower
+them for real. The wrappers also expose layout adaptation (GQA head
+repetition, (B,T,H,D) <-> (BH,T,D)) so the model code stays clean.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.aircomp_sum import aircomp_sum_pallas
+from repro.kernels.cosine_sim import cosine_partials_pallas
+from repro.kernels.swa_attention import swa_attention_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def aircomp_sum(stacked: jnp.ndarray, bp: jnp.ndarray,
+                noise: jnp.ndarray) -> jnp.ndarray:
+    """Fused (sum_k bp_k w_k + n)/sum bp_k. stacked (K,D) -> (D,)."""
+    return aircomp_sum_pallas(stacked, bp, noise, interpret=INTERPRET)
+
+
+def cosine_sim(deltas: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-12):
+    """Per-client cos(dw_k, g): (K, D), (D,) -> (K,)."""
+    parts = cosine_partials_pallas(deltas, g, interpret=INTERPRET)
+    gn = jnp.sqrt(jnp.maximum(jnp.sum(g.astype(jnp.float32) ** 2), eps))
+    return parts[:, 0] / jnp.maximum(jnp.sqrt(jnp.maximum(parts[:, 1], eps)) * gn,
+                                     eps)
+
+
+def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  window: Optional[int] = None, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128) -> jnp.ndarray:
+    """Flash attention with sliding window. (B,T,H,D)/(B,S,Hkv,D) layout;
+    GQA: kv heads are repeated to match q heads."""
+    b, t, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, t, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    out = swa_attention_pallas(qf, kf, vf, window=window, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=INTERPRET)
+    return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import jax
+
+
+def aircomp_sum_ref(stacked: jnp.ndarray, bp: jnp.ndarray,
+                    noise: jnp.ndarray) -> jnp.ndarray:
+    """(sum_k bp_k x_k + noise) / sum_k bp_k."""
+    varsigma = jnp.maximum(jnp.sum(bp), 1e-12)
+    return (jnp.einsum("k,kd->d", bp.astype(jnp.float32),
+                       stacked.astype(jnp.float32))
+            + noise.astype(jnp.float32)) / varsigma
+
+
+def cosine_partials_ref(deltas: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    d32 = deltas.astype(jnp.float32)
+    dot = d32 @ g.astype(jnp.float32)
+    n2 = jnp.sum(d32 * d32, axis=1)
+    return jnp.stack([dot, n2], axis=1)
+
+
+def swa_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      window: Optional[int] = None,
+                      causal: bool = True) -> jnp.ndarray:
+    """q: (BH,T,D), k/v: (BH,S,D). Full-softmax oracle with causal+window."""
+    t, s = q.shape[1], k.shape[1]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qp = jnp.arange(t)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & (kp > qp - window)
+    logits = jnp.where(mask[None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen for padded queries) -> zeros
+    probs = jnp.where(mask[None].any(-1, keepdims=True), probs, 0.0)
+    return jnp.einsum("bts,bsd->btd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_intra_chunk_ref(cum, b, c, xdt):
+    """Oracle for the SSD intra-chunk kernel. cum: (G,Q); b,c: (G,Q,N);
+    xdt: (G,Q,P) -> (y (G,Q,P), state (G,N,P), chunk_decay (G,))."""
+    q = cum.shape[1]
+    li = cum[:, :, None]
+    lj = cum[:, None, :]
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((q, q), bool))[None]
+    scores = jnp.einsum("gin,gjn->gij", c.astype(jnp.float32),
+                        b.astype(jnp.float32))
+    scores = jnp.where(causal, scores * decay, 0.0)
+    y = jnp.einsum("gij,gjp->gip", scores, xdt.astype(jnp.float32))
+    tail = jnp.exp(jnp.clip(cum[:, -1:] - cum, -60.0, 0.0))
+    state = jnp.einsum("gjn,gjp->gnp", b.astype(jnp.float32) * tail[..., None],
+                       xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(jnp.clip(cum[:, -1], -60.0, 0.0))
+    return y.astype(xdt.dtype), state, chunk_decay

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape x mesh) combination, build the
+distributed step, ``.lower().compile()`` it against ShapeDtypeStruct inputs
+(zero allocation), print memory_analysis()/cost_analysis(), and record a
+JSON blob (FLOPs, bytes, per-collective bytes, roofline terms) consumed by
+EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline_bench.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+            verbose: bool = True) -> dict:
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh, client_axes_for
+    from repro.launch.shapes import SHAPES, applicability
+    from repro.launch.steps import build_step, runtime_config
+    from repro.models.transformer import param_count, active_param_count
+    from repro.models.transformer import init_model  # noqa: F401
+    from repro.roofline.analysis import collective_bytes, roofline_terms, model_flops
+
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, note = applicability(cfg0, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": "skipped", "note": note}
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} x {shape_name}: {note}")
+        return _save(rec, out_dir)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    cfg = runtime_config(cfg0, shape)
+    t0 = time.time()
+    jax.set_mesh(mesh)  # context mesh: shard_map regions resolve axes on it
+    try:
+        extra = {}
+        if shape.kind == "decode" and os.environ.get("REPRO_KV_QUANT") == "1":
+            extra["kv_quant"] = True
+        if shape.kind == "train" and os.environ.get("REPRO_SEQ_PARALLEL") == "1":
+            extra["seq_parallel"] = True
+        jitted, structs, _ = build_step(cfg0, mesh, shape, **extra)
+        lowered = jitted.lower(*structs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+    finally:
+        pass  # set_mesh(None) unsupported; next run_one overwrites the mesh
+
+    from repro.roofline.hlo_parse import analyze as hlo_analyze
+
+    flops_raw = float(cost.get("flops", 0.0))
+    byt_raw = float(cost.get("bytes accessed", 0.0))
+    parsed = hlo_analyze(hlo)
+    flops = max(parsed["flops"], flops_raw)
+    # bytes: scale the cost_analysis number by the same while-loop
+    # undercount factor (uniform-intensity assumption, see EXPERIMENTS.md)
+    scan_factor = flops / max(flops_raw, 1.0)
+    byt = byt_raw * scan_factor
+    coll = {k: v for k, v in parsed.items()
+            if k not in ("flops", "coll_bytes")}
+    terms = roofline_terms(flops, byt, coll, chips)
+
+    # params/tokens for the MODEL_FLOPS utilisation ratio
+    n_params = _param_count_cached(arch, cfg0)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        from repro.launch.steps import make_paota_train_step  # noqa
+        tokens *= 5  # M local steps per PAOTA round
+    mflops = model_flops(n_params["total"], n_params["active"], tokens,
+                         is_train=(shape.kind == "train")) / chips
+    # ^ per-chip, matching cost_analysis' per-partition accounting
+
+    mem_rec = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_rec[attr] = int(getattr(mem, attr))
+
+    rec.update({
+        "status": "ok",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops": flops,
+        "hlo_bytes": byt,
+        "hlo_flops_uncorrected": flops_raw,
+        "hlo_bytes_uncorrected": byt_raw,
+        "scan_trip_correction": round(scan_factor, 2),
+        "collectives": coll,
+        "roofline": {k: (v if not isinstance(v, float) else float(v))
+                     for k, v in terms.items()},
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / flops) if flops else None,
+        "params_total": n_params["total"],
+        "params_active": n_params["active"],
+        "memory_analysis": mem_rec,
+        "bytes_per_chip_args": (mem_rec.get("argument_size_in_bytes", 0) / chips
+                                if mem_rec else None),
+        "client_axes": list(client_axes_for(cfg0, mesh)) if shape.kind == "train" else None,
+    })
+    if verbose:
+        print(f"[ok] {arch} x {shape_name} x {mesh_kind}: "
+              f"flops={flops:.3e} bytes={byt:.3e} "
+              f"coll={sum(coll.values()):.3e}B dom={terms['dominant']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"     memory_analysis: {mem_rec}")
+    return _save(rec, out_dir)
+
+
+_PC_CACHE = {}
+
+
+def _param_count_cached(arch: str, cfg) -> dict:
+    if arch in _PC_CACHE:
+        return _PC_CACHE[arch]
+    import jax
+    from repro.launch.steps import abstract_params
+    from repro.models.transformer import active_param_count
+
+    tree = abstract_params(cfg)
+    total = sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+    active = active_param_count(tree, cfg)
+    _PC_CACHE[arch] = {"total": total, "active": active}
+    return _PC_CACHE[arch]
+
+
+def _save(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_IDS
+    from repro.launch.shapes import SHAPE_IDS
+
+    archs = ARCH_IDS if args.all or not args.arch else [args.arch]
+    shapes = SHAPE_IDS if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                tag = f"{arch}__{shape}__{mk}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("ok", "skipped"):
+                            print(f"[cached] {tag}")
+                            continue
+                try:
+                    run_one(arch, shape, mk, args.out)
+                except Exception as e:  # record, keep going
+                    traceback.print_exc()
+                    failures.append(tag)
+                    _save({"arch": arch, "shape": shape, "mesh": mk,
+                           "status": "error", "note": repr(e)[:2000]}, args.out)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Federated-learning launcher — the paper's experiment driver (Section IV).
+
+Thin CLI over examples/fl_noniid_mnist.py:
+
+    PYTHONPATH=src python -m repro.launch.fl_train --rounds 100 \
+        --clients 100 --solver waterfill
+"""
+from examples.fl_noniid_mnist import main
+
+if __name__ == "__main__":
+    main()

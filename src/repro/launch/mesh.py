@@ -1,0 +1,62 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+
+FL-mode client placement (DESIGN.md §4): the PAOTA client axis is
+("data",) — or ("pod","data") multi-pod — for architectures whose full
+replica fits one model-parallel group; for the giant MoE archs the client
+axis is ("pod",) (2 semi-async cohorts) with expert-parallel sharding over
+"data" inside each client.
+
+Functions, not module constants: importing this module never touches jax
+device state (required so smoke tests see 1 CPU device while the dry-run
+sees 512 forced host devices).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(*, data: int = 1, model: int = 1):
+    """Tiny mesh over real local devices (tests on CPU)."""
+    n = data * model
+    if len(jax.devices()) < n:
+        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def client_axes_for(cfg, mesh) -> Tuple[str, ...]:
+    """PAOTA client axis selection (DESIGN.md §4 + EXPERIMENTS.md §Perf
+    iter A):
+
+    * giant MoE (llama4/mixtral): replica needs EP+TP inside -> client=pod
+      (2 semi-async cohorts multi-pod; degenerate sync single-pod);
+    * small archs whose attention heads do NOT divide the model axis
+      (smollm 9H, internvl2 14H, minicpm 36H): TP sharding replicated
+      their attention compute 16x — flatten clients over BOTH axes
+      (one chip per client, 256/512 clients, zero TP collectives);
+    * everything else: client=data groups with 16-way TP inside.
+    """
+    giant = cfg.name.startswith(("llama4", "mixtral"))
+    if giant:
+        return ("pod",) if "pod" in mesh.axis_names else ()
+    msize = mesh.shape.get("model", 1)
+    heads_bad = cfg.num_heads and cfg.num_heads % msize != 0
+    # replica must fit one chip: params bf16 + grads + activations << 16GB
+    small = cfg.name.startswith(("smollm", "internvl2", "minicpm"))
+    if heads_bad and small:
+        return data_axes(mesh) + ("model",)
+    return data_axes(mesh)

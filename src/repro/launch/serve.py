@@ -1,0 +1,29 @@
+"""Serving launcher: batched decode loop (the serve_step the decode dry-runs
+lower). CPU demo via --demo; production mesh lowering via repro.launch.dryrun.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --demo
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--cache", type=int, default=128)
+    ap.add_argument("--demo", action="store_true")
+    args = ap.parse_args()
+
+    import sys
+    sys.argv = ["serve_decode", "--arch", args.arch, "--batch",
+                str(args.batch), "--steps", str(args.steps), "--cache",
+                str(args.cache)] + (["--reduced"] if args.demo else [])
+    import examples.serve_decode as sd
+    sd.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Assigned input shapes and input_specs() builders.
+
+The four assigned shapes:
+  train_4k       seq_len=  4,096  global_batch= 256  (training)
+  prefill_32k    seq_len= 32,768  global_batch=  32  (inference-prefill)
+  decode_32k     seq_len= 32,768  global_batch= 128  (inference-decode)
+  long_500k      seq_len=524,288  global_batch=   1  (long-context-decode)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation) for the dry-run; ``make_batch`` builds
+small concrete batches for CPU smoke tests.
+
+Skip rules (DESIGN.md §4):
+  - encoder-only (hubert): no decode step -> decode_32k / long_500k skipped.
+  - long_500k needs sub-quadratic attention: SSM/hybrid run natively; archs
+    with sliding_window run windowed; full-attention archs get the
+    framework's sliding-window variant (beyond-paper, flagged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+LONG_CONTEXT_WINDOW = 4096  # SWA width applied to full-attn archs for long_500k
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+SHAPE_IDS = list(SHAPES)
+
+
+def applicability(cfg: ModelConfig, shape: InputShape):
+    """Returns (applicable: bool, note: str)."""
+    if shape.kind == "decode" and cfg.encoder_only:
+        return False, "encoder-only: no decode step (DESIGN.md §4)"
+    return True, ""
+
+
+def shape_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adaptation: long_500k forces sub-quadratic attention
+    on archs that would otherwise be O(T) per decoded token in cache size
+    only — full-attn archs get the sliding-window variant (flagged)."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.sliding_window is None):
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.modality == "vision_text":
+        return max(seq_len - cfg.num_patches, 8)
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, batch_override=None):
+    """Abstract ShapeDtypeStruct inputs for jit(...).lower(**specs)."""
+    from repro.models.transformer import init_decode_state
+
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    cfg = shape_config(cfg, shape)
+    i32 = jnp.int32
+
+    if shape.kind in ("train", "prefill"):
+        t = _text_len(cfg, s)
+        if cfg.modality == "audio":
+            batch = {
+                "frame_feats": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim),
+                                                    jnp.dtype(cfg.compute_dtype)),
+                "mask_indicator": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        elif cfg.modality == "vision_text":
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, t), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (b, cfg.num_patches, cfg.frontend_dim),
+                    jnp.dtype(cfg.compute_dtype)),
+            }
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, t), i32)}
+        return {"batch": batch}
+
+    # decode: one new token against a seq_len-deep cache/state
+    state = jax.eval_shape(lambda: init_decode_state(cfg, b, s))
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "state": state,
+        "index": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: InputShape, key=None, *,
+               batch_override: Optional[int] = None,
+               seq_override: Optional[int] = None):
+    """Small concrete batch for smoke tests (reduced configs on CPU)."""
+    rng = np.random.default_rng(0)
+    b = batch_override or shape.global_batch
+    s = seq_override or shape.seq_len
+    cfg = shape_config(cfg, shape)
+
+    if shape.kind in ("train", "prefill"):
+        t = _text_len(cfg, s)
+        if cfg.modality == "audio":
+            return {
+                "frame_feats": jnp.asarray(
+                    rng.normal(size=(b, s, cfg.frontend_dim)).astype(np.float32)),
+                "mask_indicator": jnp.asarray(
+                    (rng.random((b, s)) < cfg.mask_prob).astype(np.int32)),
+                "targets": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)),
+            }
+        if cfg.modality == "vision_text":
+            return {
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, (b, t)).astype(np.int32)),
+                "patch_embeds": jnp.asarray(
+                    rng.normal(size=(b, cfg.num_patches, cfg.frontend_dim))
+                    .astype(np.float32)),
+            }
+        return {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, t)).astype(np.int32))}
+
+    from repro.models.transformer import init_decode_state
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)).astype(np.int32)),
+        "state": init_decode_state(cfg, b, s),
+        "index": jnp.asarray(min(7, s - 1), jnp.int32),
+    }

@@ -1,0 +1,275 @@
+"""Distributed step builders: the PAOTA round step (train), prefill, and
+decode — with in/out shardings for the production meshes.
+
+train_step (PAOTA round, DESIGN.md §3/§4): client-stacked params (K, ...)
+sharded over the client mesh axes; each client runs M local SGD steps
+(lax.scan) on its own microbatches; the round ends with the AirComp
+aggregation — a masked power-weighted all-reduce over the client axes with
+AWGN injected at 1/varsigma scale (eqs. 6+8). Stragglers (mask=0) keep
+their local params (eq. 4 semantics), exactly Algorithm 1 in SPMD form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import client_axes_for, data_axes
+from repro.launch.shapes import InputShape, shape_config
+from repro.models.config import ModelConfig
+from repro.models.transformer import (decode_step, forward, init_decode_state,
+                                      init_model, loss_fn)
+from repro.sharding.rules import (batch_specs, decode_state_specs,
+                                  param_specs, stack_client_specs)
+
+
+def _axis_size(mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def runtime_config(cfg: ModelConfig, shape: Optional[InputShape] = None,
+                   dtype: str = "bfloat16", remat: str = "block"):
+    """Dry-run/production config: bf16 params+compute, block remat."""
+    if shape is not None:
+        cfg = shape_config(cfg, shape)
+    return dataclasses.replace(cfg, param_dtype=dtype, compute_dtype=dtype,
+                               remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStructs — no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, stack: int = 0):
+    base = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+    if not stack:
+        return base
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((stack,) + s.shape, s.dtype), base)
+
+
+def train_batch_struct(cfg: ModelConfig, shape: InputShape, k_clients: int,
+                       local_steps: int):
+    """(K, M, mb, ...) batch structs; mb = global_batch / K."""
+    mb = max(shape.global_batch // max(k_clients, 1), 1)
+    s = shape.seq_len
+    i32 = jnp.int32
+    lead = (k_clients, local_steps, mb)
+    if cfg.modality == "audio":
+        return {
+            "frame_feats": jax.ShapeDtypeStruct(lead + (s, cfg.frontend_dim),
+                                                jnp.dtype(cfg.compute_dtype)),
+            "mask_indicator": jax.ShapeDtypeStruct(lead + (s,), i32),
+            "targets": jax.ShapeDtypeStruct(lead + (s,), i32),
+        }
+    if cfg.modality == "vision_text":
+        t = max(s - cfg.num_patches, 8)
+        return {
+            "tokens": jax.ShapeDtypeStruct(lead + (t,), i32),
+            "patch_embeds": jax.ShapeDtypeStruct(
+                lead + (cfg.num_patches, cfg.frontend_dim),
+                jnp.dtype(cfg.compute_dtype)),
+        }
+    return {"tokens": jax.ShapeDtypeStruct(lead + (s,), i32)}
+
+
+# ---------------------------------------------------------------------------
+# PAOTA train step
+# ---------------------------------------------------------------------------
+
+def make_paota_train_step(cfg: ModelConfig, mesh, shape: InputShape, *,
+                          lr: float = 1e-3, local_steps: int = 5,
+                          sigma_over_varsigma: float = 1e-4,
+                          client_axes: Optional[Tuple[str, ...]] = None,
+                          ep_axis: Optional[str] = None,
+                          seq_parallel: bool = False,
+                          donate: bool = True):
+    """Returns (jitted_step, in_structs, in_shardings).
+
+    step(stacked_params, batch, powers, mask, seed) ->
+        (new_stacked_params, metrics)
+    """
+    if client_axes is None:
+        client_axes = client_axes_for(cfg, mesh)
+    k = max(_axis_size(mesh, client_axes), 1)
+    dp_left = tuple(a for a in data_axes(mesh) if a not in client_axes)
+    # activation sharding hints (EXPERIMENTS.md §Perf iter 1): without these
+    # GSPMD replicates activations inside vmap+scan.
+    ep_ok = (cfg.num_experts > 0 and "data" not in client_axes
+             and cfg.num_experts % mesh.shape.get("data", 1) == 0)
+    cfg = dataclasses.replace(
+        cfg, act_dp=dp_left,
+        act_tp="model" if "model" not in client_axes else None,
+        act_ep="data" if ep_ok else None,
+        act_ep_size=mesh.shape.get("data", 1) if ep_ok else 0,
+        seq_parallel=seq_parallel and "model" not in client_axes)
+
+    # gradient accumulation: one local SGD step over mb sequences is
+    # processed in `accum` chunks so layer-boundary activations stay
+    # ~128k-tokens deep (EXPERIMENTS.md §Perf iter 3).
+    mb_total = max(shape.global_batch // k, 1)
+    tokens_per_step = mb_total * shape.seq_len
+    accum = max(1, min(mb_total, tokens_per_step // 262144))
+    while mb_total % accum:
+        accum -= 1
+
+    def local_sgd(params, mbs):
+        def sgd_step(p, mb):
+            if accum == 1:
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, mb, cfg)
+                p = jax.tree_util.tree_map(
+                    lambda a, b: (a - lr * b.astype(jnp.float32)).astype(a.dtype),
+                    p, g)
+                return p, l
+            sub = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                mb)
+
+            def acc_body(carry, chunk):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    p, chunk, cfg)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: (a + b.astype(a.dtype)), g_acc, g)
+                return (g_acc, l_acc + l), 0.0
+
+            # bf16 accumulator: halves the accumulation buffer (the fp32
+            # version alone was 12 GB/chip for llama4); loss-scale safety
+            # is acceptable at accum<=8 (§Perf iter 3b)
+            g0 = jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.bfloat16), p)
+            (g_sum, l_sum), _ = jax.lax.scan(acc_body, (g0, 0.0), sub)
+            p = jax.tree_util.tree_map(
+                lambda a, b: (a - (lr / accum)
+                              * b.astype(jnp.float32)).astype(a.dtype),
+                p, g_sum)
+            return p, l_sum / accum
+        return jax.lax.scan(sgd_step, params, mbs)
+
+    def step(stacked, batch, powers, mask, seed):
+        new_stacked, losses = jax.vmap(local_sgd)(stacked, batch)
+        bp = (powers * mask).astype(jnp.float32)
+        varsigma = jnp.maximum(jnp.sum(bp), 1e-12)
+
+        flat, treedef = jax.tree_util.tree_flatten(new_stacked)
+        agg_flat = []
+        for i, leaf in enumerate(flat):
+            s = jnp.einsum("k,k...->...", bp.astype(leaf.dtype), leaf)
+            if sigma_over_varsigma > 0:
+                noise = sigma_over_varsigma * varsigma * jax.random.normal(
+                    jax.random.fold_in(seed, i), leaf.shape[1:], jnp.float32)
+                s = s + noise.astype(leaf.dtype)
+            agg_flat.append((s / varsigma.astype(leaf.dtype)))
+        agg = jax.tree_util.tree_unflatten(treedef, agg_flat)
+
+        # ready clients receive the aggregate; stragglers keep training state
+        def merge(a, local):
+            m = mask.reshape((k,) + (1,) * (local.ndim - 1)).astype(local.dtype)
+            return m * jnp.broadcast_to(a[None], local.shape) + (1 - m) * local
+
+        merged = jax.tree_util.tree_map(merge, agg, new_stacked)
+        metrics = {"loss": jnp.mean(losses), "varsigma": varsigma,
+                   "participants": jnp.sum(mask)}
+        return merged, metrics
+
+    stacked_struct = abstract_params(cfg, stack=k)
+    p_specs = stack_client_specs(stacked_struct, cfg, mesh, client_axes,
+                                 ep_axis=ep_axis)
+    batch_s = train_batch_struct(cfg, shape, k, local_steps)
+    b_specs = batch_specs(
+        batch_s, dp_left,
+        lead_axes=(tuple(client_axes) if client_axes else (), ()))
+    vec_spec = P(None)
+    in_shard = (_named(mesh, p_specs), _named(mesh, b_specs),
+                _named(mesh, vec_spec), _named(mesh, vec_spec),
+                _named(mesh, P(None)))
+
+    structs = (
+        abstract_params(cfg, stack=k),
+        batch_s,
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((k,), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    jitted = jax.jit(step, in_shardings=in_shard,
+                     donate_argnums=(0,) if donate else ())
+    return jitted, structs, in_shard
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, mesh, shape: InputShape):
+    dp = data_axes(mesh)
+    ep_ok = cfg.num_experts > 0 and cfg.num_experts % mesh.shape.get("data", 1) == 0
+    cfg = dataclasses.replace(cfg, act_dp=dp if shape.global_batch >= 2 else (),
+                              act_tp="model", act_ep="data" if ep_ok else None,
+                              act_ep_size=mesh.shape.get("data", 1) if ep_ok else 0)
+
+    def prefill(params, batch):
+        logits, aux, caches = forward(params, batch, cfg,
+                                      return_cache=cfg.supports_decode)
+        return logits[:, -1:, :], caches
+
+    from repro.launch.shapes import input_specs
+    specs = input_specs(cfg, shape)
+    batch_struct = specs["batch"]
+    p_specs = param_specs(abstract_params(cfg), cfg, mesh, ep_axis="data")
+    b_specs = batch_specs(batch_struct, dp)
+    in_shard = (_named(mesh, p_specs), _named(mesh, b_specs))
+    structs = (abstract_params(cfg), batch_struct)
+    return jax.jit(prefill, in_shardings=in_shard), structs, in_shard
+
+
+def make_serve_step(cfg: ModelConfig, mesh, shape: InputShape,
+                    kv_quant: bool = False):
+    dp = data_axes(mesh)
+    b = shape.global_batch
+    # decode keeps the baseline auto-sharding: the act/EP hints measurably
+    # REGRESSED decode (weights re-gathered per step; §Perf iter D refuted)
+    cfg = dataclasses.replace(cfg, act_dp=(), act_tp=None, act_ep=None,
+                              act_ep_size=0, kv_quant=kv_quant)
+
+    def serve(params, tokens, state, index):
+        logits, new_state = decode_step(params, tokens, state, index, cfg)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_state
+
+    state_struct = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, shape.seq_len))
+    p_specs = param_specs(abstract_params(cfg), cfg, mesh, ep_axis="data")
+    s_specs = decode_state_specs(state_struct, cfg, mesh, dp)
+    tok_spec = P(dp if len(dp) != 1 else dp[0], None) if b >= 2 else P(None, None)
+    in_shard = (_named(mesh, p_specs), _named(mesh, tok_spec),
+                _named(mesh, s_specs), _named(mesh, P()))
+    structs = (abstract_params(cfg),
+               jax.ShapeDtypeStruct((b, 1), jnp.int32),
+               state_struct,
+               jax.ShapeDtypeStruct((), jnp.int32))
+    return (jax.jit(serve, in_shardings=in_shard, donate_argnums=(2,)),
+            structs, in_shard)
+
+
+def build_step(cfg: ModelConfig, mesh, shape: InputShape, **kw):
+    """Dispatch by shape kind. Returns (jitted, structs, shardings)."""
+    cfg = runtime_config(cfg, shape)
+    if shape.kind == "train":
+        return make_paota_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, mesh, shape)
+    return make_serve_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,10 @@
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+    loss_fn,
+    param_count,
+    active_param_count,
+)

@@ -1,0 +1,40 @@
+"""The paper's own model: an MLP with two hidden layers of 10 nodes for
+MNIST-like 10-class classification (Section IV-A).
+
+Kept separate from the transformer zoo — this is the model the FL
+experiments (Fig. 3/4, Table I) train.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp_params(key, d_in: int = 784, hidden: int = 10, n_classes: int = 10):
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lin(k, i, o):
+        w = jax.random.normal(k, (i, o)) * jnp.sqrt(2.0 / i)
+        return {"w": w.astype(jnp.float32), "b": jnp.zeros((o,), jnp.float32)}
+
+    return {"l1": lin(k1, d_in, hidden), "l2": lin(k2, hidden, hidden),
+            "l3": lin(k3, hidden, n_classes)}
+
+
+def mlp_apply(params, x):
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return h @ params["l3"]["w"] + params["l3"]["b"]
+
+
+def mlp_loss(params, batch):
+    logits = mlp_apply(params, batch["x"])
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def mlp_accuracy(params, batch):
+    logits = mlp_apply(params, batch["x"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))

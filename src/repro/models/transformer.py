@@ -1,0 +1,509 @@
+"""Model assembly for all assigned architecture families.
+
+Layers are *stacked* along a leading L axis and iterated with ``lax.scan`` —
+this keeps HLO size and compile time bounded for 48–81-layer configs (critical
+for the 80-combination multi-pod dry-run) and gives XLA a single fusion region
+per block.
+
+Families:
+  dense  — llama-style decoder (smollm, olmo, minicpm, granite)
+  moe    — GShard-style expert blocks (llama4-maverick top-1, mixtral top-2 SWA)
+  ssm    — Mamba2 / SSD (mamba2-370m)
+  hybrid — Mamba2 backbone + shared attention block every p layers (zamba2-7b)
+  vlm    — decoder consuming [patch embeddings ; text] (internvl2-1b backbone)
+  audio  — bidirectional encoder + masked prediction (hubert-xlarge backbone)
+
+VLM/audio modality frontends are STUBS per instructions: ``input_specs``
+provides precomputed patch/frame embeddings; a learned projector maps them
+into d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, dtype, layer_idx_static: int = 0):
+    """One main-trunk block. dense/moe/vlm/audio: attn+ffn. ssm/hybrid: mamba2."""
+    if cfg.family in ("ssm", "hybrid"):
+        return {"mamba": SSM.init_mamba2(key, cfg, dtype),
+                "norm": L.maybe_init_norm(cfg.d_model, cfg, dtype)}
+    k1, k2 = jax.random.split(key)
+    block = {
+        "attn": L.init_attention(k1, cfg, dtype),
+        "ln1": L.maybe_init_norm(cfg.d_model, cfg, dtype),
+        "ln2": L.maybe_init_norm(cfg.d_model, cfg, dtype),
+    }
+    if cfg.num_experts > 0:
+        block["moe"] = MOE.init_moe(k2, cfg, dtype)
+    else:
+        block["mlp"] = L.init_mlp(k2, cfg, dtype)
+    return block
+
+
+def apply_block_full(block, x, cfg: ModelConfig, positions):
+    """Full-sequence attention block (train / prefill). Returns (x, kv, aux)."""
+    h = L.apply_norm(block["ln1"], x, cfg)
+    attn_out, kv = L.apply_attention(block["attn"], h, cfg, positions)
+    x = x + cfg.residual_scale * attn_out
+    h = L.apply_norm(block["ln2"], x, cfg)
+    if cfg.num_experts > 0:
+        ffn_out, aux = MOE.apply_moe(block["moe"], h, cfg)
+    else:
+        ffn_out, aux = L.apply_mlp(block["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    x = x + cfg.residual_scale * ffn_out
+    x = L.constrain(x, cfg, "btd_seq" if cfg.seq_parallel else "btd")
+    return x, kv, aux
+
+
+def apply_block_decode(block, x, cache, index, cfg: ModelConfig):
+    h = L.apply_norm(block["ln1"], x, cfg)
+    attn_out, new_cache = L.apply_attention_decode(block["attn"], h, cache, index, cfg)
+    x = x + cfg.residual_scale * attn_out
+    h = L.apply_norm(block["ln2"], x, cfg)
+    if cfg.num_experts > 0:
+        ffn_out, _ = MOE.apply_moe(block["moe"], h, cfg)
+    else:
+        ffn_out = L.apply_mlp(block["mlp"], h)
+    x = x + cfg.residual_scale * ffn_out
+    return x, new_cache
+
+
+def apply_mamba_block_full(block, x, cfg: ModelConfig, state=None):
+    h = L.apply_norm(block["norm"], x, cfg)
+    out, new_state = SSM.apply_mamba2(block["mamba"], h, cfg, state)
+    return x + cfg.residual_scale * out, new_state
+
+
+def apply_mamba_block_decode(block, x, state, cfg: ModelConfig):
+    h = L.apply_norm(block["norm"], x, cfg)
+    out, new_state = SSM.apply_mamba2_decode(block["mamba"], h, state, cfg)
+    return x + cfg.residual_scale * out, new_state
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def n_shared_slots(cfg: ModelConfig) -> int:
+    if cfg.shared_attn_period <= 0:
+        return 0
+    return (cfg.num_layers + cfg.shared_attn_period - 1) // cfg.shared_attn_period
+
+
+def init_model(key, cfg: ModelConfig) -> PyTree:
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, PyTree] = {}
+    params["embedding"] = L.init_embedding(keys[0], cfg, dtype)
+
+    layer_keys = jax.random.split(keys[1], cfg.num_layers)
+    params["layers"] = jax.vmap(lambda k: init_block(k, cfg, dtype))(layer_keys)
+
+    if cfg.family == "hybrid":
+        # Zamba2 [arXiv:2411.15242]: ONE shared attention+MLP block reused
+        # every `shared_attn_period` layers (weight sharing across depth).
+        params["shared_attn"] = {
+            "attn": L.init_attention(keys[2], cfg, dtype),
+            "mlp": L.init_mlp(keys[3], cfg, dtype),
+            "ln1": L.maybe_init_norm(cfg.d_model, cfg, dtype),
+            "ln2": L.maybe_init_norm(cfg.d_model, cfg, dtype),
+        }
+    params["final_norm"] = L.maybe_init_norm(cfg.d_model, cfg, dtype)
+
+    if cfg.modality == "vision_text":
+        params["projector"] = L.init_dense(keys[4], cfg.frontend_dim, cfg.d_model, dtype)
+    if cfg.modality == "audio":
+        params["frontend_proj"] = L.init_dense(keys[5], cfg.frontend_dim, cfg.d_model, dtype)
+        params["mask_emb"] = L._normal(keys[6], (cfg.d_model,), dtype)
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+def active_param_count(params: PyTree, cfg: ModelConfig) -> int:
+    """MoE-aware: count each expert tensor at k/E of its size."""
+    total = 0
+    for path, x in jax.tree_util.tree_leaves_with_path(params):
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        size = int(x.size)
+        if cfg.num_experts > 0 and any(k in ("gate", "up", "down") for k in keys) \
+                and "moe" in keys:
+            size = size * max(cfg.experts_per_token, 1) // cfg.num_experts
+        total += size
+    return total
+
+
+# ---------------------------------------------------------------------------
+# embedding / trunk entry
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Returns (x (B,T,d), positions (B,T), text_offset)."""
+    dtype = _dtype(cfg)
+    if cfg.modality == "vision_text":
+        patches = batch["patch_embeds"].astype(dtype)           # (B, P, F)
+        proj = L.apply_dense(params["projector"], patches)      # (B, P, d)
+        tok = L.embed_tokens(params["embedding"], batch["tokens"], cfg)
+        x = jnp.concatenate([proj, tok], axis=1)
+        b, t = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+        return x, positions, cfg.num_patches
+    if cfg.modality == "audio":
+        feats = batch["frame_feats"].astype(dtype)              # (B, T, F)
+        x = L.apply_dense(params["frontend_proj"], feats)
+        if "mask_indicator" in batch:
+            m = batch["mask_indicator"][..., None].astype(dtype)  # (B,T,1)
+            x = x * (1 - m) + params["mask_emb"][None, None, :] * m
+        b, t = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+        return x, positions, 0
+    tok = batch["tokens"]
+    x = L.embed_tokens(params["embedding"], tok, cfg)
+    b, t = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+    return x, positions, 0
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg: ModelConfig, return_cache: bool = False,
+            return_hidden: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss, caches_or_None).
+    return_hidden: skip the unembedding (loss_fn streams it in chunks).
+
+    caches: attention KV stacked (L, B, S_c, Hkv, D) ring-ready; ssm states
+    stacked; hybrid shared-attn caches stacked over shared slots.
+    """
+    x, positions, _ = embed_inputs(params, batch, cfg)
+    b, t, _ = x.shape
+
+    if cfg.family in ("ssm", "hybrid"):
+        return _forward_recurrent(params, x, positions, cfg, return_cache,
+                                  return_hidden)
+
+    def body(carry, layer):
+        h, aux = carry
+        h, kv, aux_l = apply_block_full(layer, h, cfg, positions)
+        return (h, aux + aux_l), kv if return_cache else 0.0
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    caches = None
+    if return_cache:
+        ks, vs = kvs
+        caches = {"k": ks, "v": vs}   # (L, B, T, Hkv, D)
+    if return_hidden:
+        return x, aux / cfg.num_layers, caches
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, aux / cfg.num_layers, caches
+
+
+def _forward_recurrent(params, x, positions, cfg: ModelConfig, return_cache,
+                       return_hidden: bool = False):
+    b, t, _ = x.shape
+    n_sh = n_shared_slots(cfg)
+    shared = params.get("shared_attn")
+    idxs = jnp.arange(cfg.num_layers)
+
+    def body(carry, inp):
+        h = carry
+        layer, i = inp
+        if shared is not None:
+            def with_attn(h):
+                z = L.apply_norm(shared["ln1"], h, cfg)
+                a_out, kv = L.apply_attention(shared["attn"], z, cfg, positions)
+                h2 = h + cfg.residual_scale * a_out
+                z2 = L.apply_norm(shared["ln2"], h2, cfg)
+                return h2 + cfg.residual_scale * L.apply_mlp(shared["mlp"], z2), kv
+            def without(h):
+                hkv, hd = cfg.num_kv_heads, cfg.head_dim
+                dummy = jnp.zeros((b, t, hkv, hd), h.dtype)
+                return h, (dummy, dummy)
+            h, kv = jax.lax.cond(i % cfg.shared_attn_period == 0, with_attn, without, h)
+        else:
+            kv = 0.0
+        h, state = apply_mamba_block_full(layer, h, cfg)
+        out = (state, kv) if return_cache else (0.0, 0.0)
+        return h, out
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, outs = jax.lax.scan(body, x, (params["layers"], idxs))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    caches = None
+    if return_cache:
+        states, kvs = outs
+        caches = {"ssm_states": states}
+        if shared is not None:
+            ks, vs = kvs
+            # keep only the shared-attn slots (every period-th layer)
+            sel = jnp.arange(0, cfg.num_layers, cfg.shared_attn_period)
+            caches["shared_kv"] = {"k": ks[sel], "v": vs[sel]}
+        del n_sh
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32), caches
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, jnp.zeros((), jnp.float32), caches
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> PyTree:
+    """ShapeDtypeStruct-compatible decode state (KV ring buffers / SSM states)."""
+    dtype = _dtype(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        one = SSM.init_ssm_state(cfg, batch, dtype)
+        state = {
+            "ssm": jnp.zeros((cfg.num_layers,) + one["ssm"].shape, one["ssm"].dtype),
+            "conv": jnp.zeros((cfg.num_layers,) + one["conv"].shape, one["conv"].dtype),
+        }
+        if cfg.family == "hybrid":
+            n_sh = n_shared_slots(cfg)
+            kc = L.init_kv_cache(cfg, batch, seq_len, dtype)
+            state["shared_kv"] = {
+                name: jnp.zeros((n_sh,) + arr.shape, arr.dtype)
+                for name, arr in kc.items()}
+        return state
+    kc = L.init_kv_cache(cfg, batch, seq_len, dtype)
+    return {name: jnp.zeros((cfg.num_layers,) + arr.shape, arr.dtype)
+            for name, arr in kc.items()}
+
+
+def cache_from_prefill(caches, cfg: ModelConfig, batch: int,
+                       seq_len: int, prefill_len: int) -> PyTree:
+    """Convert forward(return_cache=True) caches into a decode state.
+
+    Attention caches (L,B,T,Hkv,D) are written into the ring buffers at
+    the positions decode expects (slot = pos % ring_size, so for
+    prefill_len <= ring_size they land at [0, prefill_len)); SSM states
+    pass through. This is the prefill -> decode hand-off of the serving
+    path (tests/test_serving.py validates logit continuity)."""
+    dtype = _dtype(cfg)
+    state = init_decode_state(cfg, batch, seq_len)
+
+    def fill_kv(ring, got):
+        size = ring.shape[2]
+        take = min(prefill_len, size)
+        src = got[:, :, prefill_len - take:prefill_len]
+        if take == prefill_len:           # no wrap: slots [0, take)
+            return ring.at[:, :, :take].set(src.astype(ring.dtype))
+        # wrapped ring: absolute position p lives in slot p % size
+        pos = jnp.arange(prefill_len - take, prefill_len)
+        slots = pos % size
+        return ring.at[:, :, slots].set(src.astype(ring.dtype))
+
+    def fill_kv_quant(state_kv, name, got):
+        """Quantize prefill K/V into the int8 ring + scale buffers."""
+        amax = jnp.max(jnp.abs(got.astype(jnp.float32)), axis=-1)
+        scale = jnp.maximum(amax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(got.astype(jnp.float32) / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+        return {name: fill_kv(state_kv[name], q),
+                f"{name}_scale": fill_kv(state_kv[f"{name}_scale"],
+                                         scale.astype(jnp.float16))}
+
+    if cfg.family in ("ssm", "hybrid"):
+        st = caches["ssm_states"]   # {"ssm": (L,B,H,P,N), "conv": (L,B,K-1,C)}
+        new = {"ssm": st["ssm"].astype(state["ssm"].dtype),
+               "conv": st["conv"].astype(state["conv"].dtype)}
+        if cfg.family == "hybrid" and "shared_kv" in caches:
+            new["shared_kv"] = {
+                "k": fill_kv(state["shared_kv"]["k"], caches["shared_kv"]["k"]),
+                "v": fill_kv(state["shared_kv"]["v"], caches["shared_kv"]["v"]),
+            }
+        elif cfg.family == "hybrid":
+            new["shared_kv"] = state["shared_kv"]
+        return new
+    if cfg.kv_quant:
+        out = {}
+        out.update(fill_kv_quant(state, "k", caches["k"]))
+        out.update(fill_kv_quant(state, "v", caches["v"]))
+        return out
+    return {"k": fill_kv(state["k"], caches["k"]),
+            "v": fill_kv(state["v"], caches["v"])}
+
+
+def decode_step(params, tokens, state, index, cfg: ModelConfig,
+                patch_embeds=None):
+    """One-token decode. tokens: (B, 1) int32; index: scalar int32 tokens so far.
+    Returns (logits (B,1,V), new_state)."""
+    x = L.embed_tokens(params["embedding"], tokens, cfg)
+
+    if cfg.family in ("ssm", "hybrid"):
+        return _decode_recurrent(params, x, state, index, cfg)
+
+    def body(h, inp):
+        layer, cache = inp
+        h, new_cache = apply_block_decode(layer, h, cache, index, cfg)
+        return h, new_cache
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], dict(state)))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, new_kv
+
+
+def _decode_recurrent(params, x, state, index, cfg: ModelConfig):
+    shared = params.get("shared_attn")
+    b = x.shape[0]
+    idxs = jnp.arange(cfg.num_layers)
+
+    if shared is not None:
+        shared_kv = state["shared_kv"]
+
+        def body(carry, inp):
+            h, skv = carry
+            layer, i, lstate = inp
+            def with_attn(operand):
+                h, skv = operand
+                slot = i // cfg.shared_attn_period
+                cache = {name: jax.lax.dynamic_index_in_dim(arr, slot, 0, False)
+                         for name, arr in skv.items()}
+                z = L.apply_norm(shared["ln1"], h, cfg)
+                a_out, nc = L.apply_attention_decode(shared["attn"], z, cache, index, cfg)
+                h2 = h + cfg.residual_scale * a_out
+                z2 = L.apply_norm(shared["ln2"], h2, cfg)
+                h2 = h2 + cfg.residual_scale * L.apply_mlp(shared["mlp"], z2)
+                skv = {name: jax.lax.dynamic_update_index_in_dim(
+                           skv[name], nc[name], slot, 0) for name in skv}
+                return h2, skv
+            h, skv = jax.lax.cond(i % cfg.shared_attn_period == 0,
+                                  with_attn, lambda o: o, (h, skv))
+            h, new_lstate = apply_mamba_block_decode(layer, h, lstate, cfg)
+            return (h, skv), new_lstate
+
+        (x, shared_kv), new_states = jax.lax.scan(
+            body, (x, shared_kv),
+            (params["layers"], idxs, {"ssm": state["ssm"], "conv": state["conv"]}))
+        new_state = {"ssm": new_states["ssm"], "conv": new_states["conv"],
+                     "shared_kv": shared_kv}
+    else:
+        def body(h, inp):
+            layer, lstate = inp
+            h, new_lstate = apply_mamba_block_decode(layer, h, lstate, cfg)
+            return h, new_lstate
+        x, new_states = jax.lax.scan(
+            body, x, (params["layers"], {"ssm": state["ssm"], "conv": state["conv"]}))
+        new_state = {"ssm": new_states["ssm"], "conv": new_states["conv"]}
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embedding"], x, cfg)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _xent(logits, labels, mask=None):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+XENT_CHUNK_THRESHOLD = 2 ** 27   # tokens*vocab above which xent streams
+XENT_CHUNK_TOKENS = 512
+
+
+def _xent_chunked(params, hidden, labels, mask, cfg: ModelConfig):
+    """Streamed cross-entropy: unembed+logsumexp one token-chunk at a time
+    (jax.checkpoint'd, so backward recomputes chunk logits instead of
+    keeping (T, V) alive — EXPERIMENTS.md §Perf iter C)."""
+    b, t, d = hidden.shape
+    c = min(XENT_CHUNK_TOKENS, t)
+    pad = (-t) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (t + pad) // c
+    hs = jnp.moveaxis(hidden.reshape(b, nc, c, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(b, nc, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, y, m = xs
+        logits = L.unembed(params["embedding"], h, cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * m
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(m)), 0.0
+
+    (num, den), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hs, ys, ms))
+    return num / jnp.maximum(den, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Training loss for any family. Returns (loss, metrics dict)."""
+    if cfg.modality == "audio":
+        n_tok, vocab = batch["targets"].size, cfg.vocab_size
+    elif cfg.modality == "vision_text":
+        n_tok, vocab = batch["tokens"].size, cfg.vocab_size
+    else:
+        n_tok, vocab = batch["tokens"].size, cfg.vocab_size
+    chunked = n_tok * vocab > XENT_CHUNK_THRESHOLD
+
+    if not chunked:
+        logits, aux, _ = forward(params, batch, cfg)
+        if cfg.modality == "audio":
+            loss = _xent(logits, batch["targets"],
+                         batch["mask_indicator"].astype(jnp.float32))
+        elif cfg.modality == "vision_text":
+            text_logits = logits[:, cfg.num_patches:-1]
+            labels = batch["tokens"][:, 1:]
+            loss = _xent(text_logits, labels)
+        else:
+            loss = _xent(logits[:, :-1], batch["labels"][:, 1:]
+                         if "labels" in batch else batch["tokens"][:, 1:])
+        total = loss + cfg.router_aux_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    hidden, aux, _ = forward(params, batch, cfg, return_hidden=True)
+    if cfg.modality == "audio":
+        labels = batch["targets"]
+        mask = batch["mask_indicator"].astype(jnp.float32)
+        h = hidden
+    elif cfg.modality == "vision_text":
+        h = hidden[:, cfg.num_patches:-1]
+        labels = batch["tokens"][:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    else:
+        h = hidden[:, :-1]
+        labels = (batch["labels"] if "labels" in batch else batch["tokens"])[:, 1:]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    loss = _xent_chunked(params, h, labels, mask, cfg)
+    total = loss + cfg.router_aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux}

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd  # noqa: F401
+from repro.optim.schedules import constant, cosine, wsd  # noqa: F401

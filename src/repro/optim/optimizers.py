@@ -1,0 +1,84 @@
+"""Minimal functional optimizers (optax-like init/update pairs).
+
+The paper's clients run plain SGD (eq. 3) — that is the default everywhere
+in the FL path. AdamW is provided for the datacenter training examples.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def sgd(lr, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = (jax.tree_util.tree_map(jnp.zeros_like, params)
+              if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z,
+                "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                   state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                   state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def u(m, v, p):
+            upd = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p
+            return upd
+
+        return (jax.tree_util.tree_map(u, m, v, params),
+                {"step": step, "m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree_util.tree_map(lambda x: x * scale.astype(x.dtype), grads)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules. WSD (warmup-stable-decay) is the MiniCPM recipe
+[arXiv:2404.06395] selected by the minicpm-2b config's training setup."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.1):
+    """MiniCPM WSD: linear warmup -> flat stable phase -> exponential-style
+    decay to floor_frac*peak over `decay` steps."""
+    floor = peak * floor_frac
+
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak * (floor / peak) ** t
+        return jnp.where(s < warmup, warm,
+                         jnp.where(s < warmup + stable, peak, dec))
+    return fn

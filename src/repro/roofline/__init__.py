@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW, collective_bytes, model_flops,  # noqa: F401
+                                     roofline_terms)

@@ -1,0 +1,111 @@
+"""Roofline-term derivation from compiled dry-run artifacts (no hardware).
+
+    compute    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). Collective bytes
+are NOT in cost_analysis: we parse the post-SPMD optimized HLO
+(compiled.as_text()) and sum operand sizes of every all-gather/all-reduce/
+reduce-scatter/all-to-all/collective-permute op.
+
+Hardware constants (per instructions — TPU v5e-like): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %x = f32[8,128]{1,0} all-gather(...)   /  bf16[2,4,8] all-to-all(
+_OP_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")[\s(]")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result bytes per collective kind from optimized HLO text.
+
+    Handles tuple-shaped results ``(f32[..], f32[..]) all-reduce``.
+    """
+    out = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        kind = None
+        for c in _COLLECTIVES:
+            # match op name, not metadata mentions
+            if f" {c}(" in line or f" {c}-start(" in line:
+                kind = c
+                break
+        if kind is None:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting async pairs
+        lhs = line.split("=", 1)[0] if "=" in line else ""
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        shapes = _TUPLE_RE.findall(rhs.split(kind)[0])
+        out[kind] += sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        del lhs
+    return out
+
+
+def model_flops(n_params: int, n_active: int, tokens: int,
+                is_train: bool) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    mult = 6.0 if is_train else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float,
+                   coll: Dict[str, int], chips: int,
+                   hw: HW = HW()) -> Dict[str, float]:
+    """NOTE: XLA's cost_analysis()/as_text() on the SPMD-partitioned module
+    report PER-PARTITION (per-chip) numbers — verified against the known
+    KV-cache size in EXPERIMENTS.md §Dry-run. So the roofline terms divide
+    by per-chip peaks only; `chips` is kept for reporting."""
+    total_coll = float(sum(coll.values()))
+    terms = {
+        "compute_s": hlo_flops / hw.peak_flops,
+        "memory_s": hlo_bytes / hw.hbm_bw,
+        # per-chip collective traffic over ICI links (conservative: 1 link)
+        "collective_s": total_coll / hw.ici_bw,
+        "collective_bytes": total_coll,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    denom = max(sum(terms[k] for k in
+                    ("compute_s", "memory_s", "collective_s")), 1e-30)
+    terms["compute_fraction"] = terms["compute_s"] / denom
+    return terms

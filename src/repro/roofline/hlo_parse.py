@@ -1,0 +1,197 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE regardless
+of trip count (verified in tests/test_roofline.py) — our layer/local-step
+scans therefore undercount FLOPs and collective bytes by up to L*M (~200x).
+This module parses the post-SPMD optimized HLO text:
+
+  * splits it into computations and builds a per-computation symbol table
+    (%var -> shape) so dot operand shapes can be resolved;
+  * finds `while` ops and reads XLA's ``known_trip_count`` backend config
+    (fallback: the comparison constant in the condition computation);
+  * walks the call graph (entry -> while bodies / fusions / calls /
+    conditionals), accumulating a repetition multiplier per computation;
+  * per computation, sums dot/convolution FLOPs and collective result
+    bytes.
+
+All numbers are per-chip (the partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{$")
+_DEF = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|\w+\[[0-9,]*\](?:\{[^}]*\})?)")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLREF = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _first_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(text):
+        total += _DTYPE_BYTES.get(dt, 0) * _shape_elems(dims)
+    return total
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _COMP_HDR.match(stripped)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _symbols(lines: List[str]) -> Dict[str, str]:
+    """%var -> shape-ish string (may be a tuple type)."""
+    sym = {}
+    for line in lines:
+        m = _DEF.match(line)
+        if m:
+            sym[m.group(1)] = m.group(2)
+    return sym
+
+
+def _dot_flops(line: str, sym: Dict[str, str]) -> float:
+    m = _DEF.match(line)
+    if not m:
+        return 0.0
+    out_shapes = _SHAPE.findall(m.group(2))
+    if not out_shapes:
+        return 0.0
+    out_elems = _shape_elems(out_shapes[0][1])
+    ops = re.search(r"dot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", line)
+    if not ops:
+        return 0.0
+    lhs_shape = sym.get(ops.group(1), "")
+    lhs_dims_m = _SHAPE.findall(lhs_shape)
+    if not lhs_dims_m:
+        return 0.0
+    lhs_dims = [int(x) for x in lhs_dims_m[0][1].split(",") if x]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contracted = 1
+    if mc and mc.group(1):
+        for i in mc.group(1).split(","):
+            if int(i) < len(lhs_dims):
+                contracted *= lhs_dims[int(i)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(line: str, sym: Dict[str, str]) -> float:
+    m = _DEF.match(line)
+    if not m:
+        return 0.0
+    out_elems = sum(_shape_elems(d) for _, d in _SHAPE.findall(m.group(2)))
+    ops = re.search(r"convolution\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", line)
+    if not ops:
+        return 0.0
+    kern = sym.get(ops.group(2), "")
+    kern_elems = sum(_shape_elems(d) for _, d in _SHAPE.findall(kern))
+    return 2.0 * out_elems * kern_elems
+
+
+def _cond_trip_count(cond_lines: List[str]) -> int:
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in re.finditer(r"constant\((\d+)\)", line)]
+    return max(consts) if consts else 1
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps = split_computations(hlo)
+
+    local: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        sym = _symbols(lines)
+        f = 0.0
+        coll = {c: 0.0 for c in _COLLECTIVES}
+        edge: List[Tuple[str, float]] = []
+        for line in lines:
+            if " dot(" in line or line.split("=")[-1].lstrip().startswith("dot("):
+                f += _dot_flops(line, sym)
+            elif " convolution(" in line:
+                f += _conv_flops(line, sym)
+            for c in _COLLECTIVES:
+                if re.search(rf"\s{c}(-start)?\(", line) and "-done(" not in line:
+                    # result type = text between '=' and the op name; handles
+                    # variadic tuple collectives whose type list contains
+                    # /*index=N*/ comments (the PAOTA aggregation all-reduce)
+                    rhs = line.split("=", 1)[1] if "=" in line else line
+                    seg = re.split(rf"\s{c}(?:-start)?\(", rhs)[0]
+                    coll[c] += _first_shape_bytes(seg)
+                    break
+            if " while(" in line:
+                trips = 1.0
+                tm = _TRIP.search(line)
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if tm:
+                    trips = float(tm.group(1))
+                elif cm:
+                    trips = float(_cond_trip_count(comps.get(cm.group(1), [])))
+                if bm:
+                    edge.append((bm.group(1), trips))
+            else:
+                for ref in _CALLREF.findall(line):
+                    if ref in comps:
+                        edge.append((ref, 1.0))
+                br = _BRANCHES.search(line)
+                if br:
+                    for c in br.group(1).split(","):
+                        c = c.strip().lstrip("%")
+                        if c in comps:
+                            edge.append((c, 1.0))
+        local[name] = {"flops": f, **coll}
+        edges[name] = edge
+
+    called = {c for es in edges.values() for c, _ in es}
+    entries = [n for n in comps if n not in called] or list(comps)
+
+    totals = {"flops": 0.0, **{c: 0.0 for c in _COLLECTIVES}}
+    stack = set()
+
+    def walk(name: str, mult: float):
+        if name in stack or mult <= 0:
+            return
+        stack.add(name)
+        lc = local.get(name, {})
+        totals["flops"] += lc.get("flops", 0.0) * mult
+        for c in _COLLECTIVES:
+            totals[c] += lc.get(c, 0.0) * mult
+        for child, trips in edges.get(name, []):
+            walk(child, mult * trips)
+        stack.discard(name)
+
+    for e in entries:
+        walk(e, 1.0)
+    totals["coll_bytes"] = sum(totals[c] for c in _COLLECTIVES)
+    return totals

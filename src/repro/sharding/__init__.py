@@ -1,0 +1,2 @@
+from repro.sharding.rules import (batch_specs, decode_state_specs,  # noqa: F401
+                                  param_specs, stack_client_specs)

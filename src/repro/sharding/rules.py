@@ -1,0 +1,178 @@
+"""Partition rules: name-based PartitionSpec trees for every architecture.
+
+Strategy (baseline; §Perf iterates on it):
+  * model axis ("model") = tensor parallel: attention projections sharded on
+    the fused head dim, MLP on d_ff (always divisible by 16 across the
+    pool), mamba2 inner dim (SSM heads), embedding/unembedding on vocab
+    (GSPMD pads non-divisible vocabs).
+  * expert axis: MoE expert tensors sharded over the EP axis ("data") plus
+    "model" on d_ff — expert-parallel dispatch rides the all-to-all.
+  * batch: ("pod","data") for sync/serving paths; in FL mode the leading
+    client-stack axis takes the client axes instead.
+  * decode caches: KV sharded over batch (data) and sequence ("model") —
+    sequence-sharded flash-decode; SSM states sharded over SSM heads.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _base_spec(keys: Tuple[str, ...], shape: Tuple[int, ...],
+               cfg: ModelConfig, ep_axis: Optional[str],
+               axis_sizes: dict, tp: Optional[str] = "model") -> tuple:
+    """Spec for the TRAILING dims of one leaf (leading stack dims padded
+    with None by the caller). Divisibility-aware: pjit input shardings must
+    divide dims exactly, so non-divisible assignments fall back (vocab ->
+    shard d instead; small expert counts -> shard expert d over the EP axis
+    FSDP-style)."""
+    ndim = len(shape)
+
+    def ok(dim_from_end: int, axis) -> bool:
+        if axis is None:
+            return True
+        size = axis_sizes.get(axis, 1)
+        return shape[ndim - dim_from_end] % size == 0
+
+    def pad(spec: tuple) -> tuple:
+        spec = (None,) * (ndim - len(spec)) + spec
+        # final guard: drop any non-dividing assignment
+        return tuple(a if (a is None or shape[i] % axis_sizes.get(a, 1) == 0)
+                     else None for i, a in enumerate(spec))
+
+    leaf = keys[-1]
+    if "moe" in keys:
+        if "router" in keys:
+            return pad((None, None))
+        e_div = ok(3, ep_axis) if ndim >= 3 else False
+        if leaf in ("gate", "up"):          # (E, d, ff)
+            if e_div:
+                return pad((ep_axis, None, tp))
+            return pad((None, ep_axis, tp))   # FSDP d over EP axis
+        if leaf == "down":                  # (E, ff, d)
+            if e_div:
+                return pad((ep_axis, tp, None))
+            return pad((None, tp, ep_axis))
+    if "mamba" in keys:
+        if leaf == "in_proj":               # (d, 2*din+2gn+h)
+            return pad((None, tp))
+        if leaf == "conv_w":                # (K, dxbc)
+            return pad((None, tp))
+        if leaf == "out_proj":              # (din, d)
+            return pad((tp, None))
+        if leaf == "norm_scale":            # (din,)
+            return pad((tp,))
+        return pad(())                      # a_log/dt_bias/skip_d: replicated
+    if leaf == "embed":                     # (V, d)
+        if ok(2, tp):
+            return pad((tp, None))
+        return pad((None, tp))         # odd vocab: shard d instead
+    if leaf == "unembed":                   # (d, V)
+        if ok(1, tp):
+            return pad((None, tp))
+        return pad((tp, None))
+    if ("attn" in keys or "shared_attn" in keys) and len(keys) >= 2:
+        parent = keys[-2]
+        if parent in ("wq", "wk", "wv"):    # (d, H*hd)
+            return pad((None, tp))
+        if parent == "wo":                  # (H*hd, d)
+            return pad((tp, None))
+    if "mlp" in keys and len(keys) >= 2:
+        parent = keys[-2]
+        if parent in ("gate", "up"):        # (d, ff)
+            return pad((None, tp))
+        if parent == "down":                # (ff, d)
+            return pad((tp, None))
+    # norms, projector/frontend, mask_emb, biases: replicated
+    return pad(())
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh,
+                ep_axis: Optional[str] = "data",
+                stack_axes: Tuple = (),
+                tp_axis: Optional[str] = "model") -> object:
+    """PartitionSpec tree matching `params_shape` (a pytree of arrays or
+    ShapeDtypeStructs). `stack_axes`: mesh axes for a leading client-stack
+    dim ((), or ("data",)/("pod",)/("pod","data"))."""
+    ep = ep_axis if (ep_axis in mesh.axis_names) else None
+    tp = tp_axis if (tp_axis in mesh.axis_names and
+                     tp_axis not in stack_axes) else None
+    sizes = dict(mesh.shape)
+    lead = ((stack_axes if len(stack_axes) != 1 else stack_axes[0]),) \
+        if stack_axes else ()
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if stack_axes:
+            base = _base_spec(keys, tuple(leaf.shape[1:]), cfg, ep, sizes, tp)
+            return P(*(lead + base))
+        return P(*_base_spec(keys, tuple(leaf.shape), cfg, ep, sizes, tp))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def stack_client_specs(params_shape, cfg: ModelConfig, mesh, client_axes,
+                       ep_axis: Optional[str] = None):
+    """Specs for client-stacked params (K, ...). Inside a client replica,
+    TP over 'model'; EP over `ep_axis` only if it's not a client axis."""
+    ep = ep_axis
+    if ep is None:
+        ep = "data" if ("data" in mesh.axis_names
+                        and "data" not in client_axes) else None
+    return param_specs(params_shape, cfg, mesh, ep_axis=ep,
+                       stack_axes=tuple(client_axes))
+
+
+def batch_specs(batch_shape, dp_axes: Tuple[str, ...], lead_axes: Tuple = ()):
+    """Batch pytree: leading stack dims (client K, local steps M) then the
+    per-step batch dim sharded over dp_axes."""
+    dp = (dp_axes if len(dp_axes) != 1 else dp_axes[0]) if dp_axes else None
+
+    def _entry(a):
+        if isinstance(a, tuple):
+            if len(a) == 0:
+                return None
+            return a if len(a) != 1 else a[0]
+        return a
+
+    lead = tuple(_entry(a) for a in lead_axes)
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        spec = lead + (dp,) + (None,) * (nd - len(lead) - 1)
+        return P(*spec[:nd])
+
+    return jax.tree_util.tree_map(one, batch_shape)
+
+
+def decode_state_specs(state_shape, cfg: ModelConfig, mesh,
+                       dp_axes: Tuple[str, ...]):
+    """KV caches (L,B,S,Hkv,hd): B over dp, S over 'model' (sequence-sharded
+    flash-decode). SSM states (L,B,H,P,N): H over 'model'. conv
+    (L,B,K-1,dxbc): dxbc over 'model'. Batch=1 shapes keep dp=None."""
+    def one(path, leaf):
+        keys = _path_keys(path)
+        nd = len(leaf.shape)
+        b = leaf.shape[1] if nd > 1 else 1
+        dp = None
+        if dp_axes and b >= 2:
+            dp = dp_axes if len(dp_axes) != 1 else dp_axes[0]
+        if keys[-1] in ("k", "v"):          # (L, B, S, Hkv, hd)
+            return P(None, dp, "model", None, None)
+        if keys[-1] in ("k_scale", "v_scale"):   # (L, B, S, Hkv)
+            return P(None, dp, "model", None)
+        if keys[-1] == "ssm":               # (L, B, H, P, N)
+            return P(None, dp, "model", None, None)
+        if keys[-1] == "conv":              # (L, B, K-1, dxbc)
+            return P(None, dp, None, "model")
+        return P(*((None,) * nd))
+
+    return jax.tree_util.tree_map_with_path(one, state_shape)

@@ -1,0 +1,94 @@
+"""AirComp channel/aggregation tests: eq. 5-8 semantics, weight simplex,
+noise scaling, masked stragglers, Pallas-kernel path equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aircomp import (ChannelConfig, aggregation_weights,
+                                aircomp_aggregate, dbm_per_hz_to_watts,
+                                effective_power_cap, sample_channel_gains)
+
+RNG = np.random.default_rng(0)
+
+
+def test_noise_psd_conversion():
+    # -174 dBm/Hz * 20 MHz -> ~8e-14 W (thermal noise floor)
+    chan = ChannelConfig()
+    assert chan.sigma_n2 == pytest.approx(20e6 * dbm_per_hz_to_watts(-174.0))
+    assert chan.sigma_n2 == pytest.approx(7.96e-14, rel=0.01)
+
+
+def test_aggregation_weights_simplex():
+    p = jnp.asarray(RNG.random(10).astype(np.float32)) * 15
+    b = jnp.asarray((RNG.random(10) < 0.6).astype(np.float32))
+    if float(b.sum()) == 0:
+        b = b.at[0].set(1.0)
+    a = aggregation_weights(p, b)
+    assert float(jnp.sum(a)) == pytest.approx(1.0, abs=1e-5)
+    assert np.all(np.asarray(a)[np.asarray(b) == 0] == 0)
+
+
+def test_noiseless_aggregate_is_weighted_mean():
+    x = jnp.asarray(RNG.normal(size=(5, 64)).astype(np.float32))
+    p = jnp.asarray([1.0, 2, 3, 4, 5], jnp.float32)
+    b = jnp.asarray([1.0, 1, 0, 1, 1], jnp.float32)
+    agg, varsigma = aircomp_aggregate(x, p, b, jax.random.PRNGKey(0), 0.0)
+    want = (1 * x[0] + 2 * x[1] + 4 * x[3] + 5 * x[4]) / 12.0
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want), rtol=1e-5)
+    assert float(varsigma) == pytest.approx(12.0)
+
+
+def test_kernel_path_matches_jnp_path():
+    x = jnp.asarray(RNG.normal(size=(7, 300)).astype(np.float32))
+    p = jnp.asarray(RNG.random(7).astype(np.float32))
+    b = jnp.ones(7, jnp.float32)
+    key = jax.random.PRNGKey(3)
+    a1, _ = aircomp_aggregate(x, p, b, key, 0.01, use_kernel=False)
+    a2, _ = aircomp_aggregate(x, p, b, key, 0.01, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_equivalent_noise_shrinks_with_total_power():
+    """Term (e): more total transmit power -> less equivalent noise. This is
+    WHY the optimizer pushes powers up against the numerator penalty."""
+    x = jnp.asarray(RNG.normal(size=(4, 2048)).astype(np.float32))
+    b = jnp.ones(4, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    lo, _ = aircomp_aggregate(x, jnp.full(4, 1.0), b, key, 1.0)
+    hi, _ = aircomp_aggregate(x, jnp.full(4, 100.0), b, key, 1.0)
+    mean = jnp.mean(x, axis=0)
+    assert float(jnp.linalg.norm(hi - mean)) < float(jnp.linalg.norm(lo - mean))
+
+
+def test_power_cap_eq7():
+    w2 = jnp.asarray([4.0, 100.0])
+    h = jnp.asarray([1.0, 0.5])
+    cap = np.asarray(effective_power_cap(w2, h, p_max=16.0))
+    # p <= |h| sqrt(P/||w||^2)
+    np.testing.assert_allclose(cap, [1.0 * 2.0, 0.5 * 0.4], rtol=1e-6)
+
+
+def test_rayleigh_channel_stats():
+    h = np.asarray(sample_channel_gains(jax.random.PRNGKey(0), 20000,
+                                        ChannelConfig()))
+    # Rayleigh(1): mean = sqrt(pi/2)
+    assert h.mean() == pytest.approx(np.sqrt(np.pi / 2), rel=0.03)
+    assert h.min() > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 16), st.integers(4, 128), st.integers(0, 1000))
+def test_aggregate_convexity_property(k, d, seed):
+    """Noiseless aggregate lies in the convex hull of the inputs: for every
+    coordinate, min_k x <= agg <= max_k x."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    p = jnp.asarray(rng.random(k).astype(np.float32) + 0.01)
+    b = jnp.ones(k, jnp.float32)
+    agg, _ = aircomp_aggregate(x, p, b, jax.random.PRNGKey(0), 0.0)
+    xn = np.asarray(x)
+    assert np.all(np.asarray(agg) <= xn.max(0) + 1e-4)
+    assert np.all(np.asarray(agg) >= xn.min(0) - 1e-4)

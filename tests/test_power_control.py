@@ -1,0 +1,116 @@
+"""Power-control optimization tests: solver cross-validation (the paper's
+Dinkelbach+MILP vs our exact water-filling vs PGD vs exhaustive), eq. 25
+properties, and hypothesis property tests on random P2 instances."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.boxqp import solve_waterfill
+from repro.core.dinkelbach import dinkelbach, solve_p2
+from repro.core.power_control import (build_p2, power_from_beta,
+                                      similarity_factor, staleness_factor)
+
+
+def _rand_problem(rng, k, p_max=15.0):
+    rho = rng.uniform(0.2, 1.0, k)
+    theta = rng.uniform(0.0, 1.0, k)
+    b = (rng.random(k) < 0.8).astype(float)
+    if b.sum() == 0:
+        b[0] = 1.0
+    return build_p2(rho, theta, np.full(k, p_max), b, smooth_l=10.0,
+                    eps_bound=0.05, model_dim=8070, sigma_n2=8e-5)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_solvers_agree_small_k(seed):
+    rng = np.random.default_rng(seed)
+    prob = _rand_problem(rng, 4)
+    ex = solve_p2(prob, "exhaustive")
+    for method in ("pgd", "waterfill", "milp"):
+        res = solve_p2(prob, method)
+        assert res.objective <= ex.objective * 1.02 + 1e-9, method
+        assert np.all(res.beta >= -1e-9) and np.all(res.beta <= 1 + 1e-9)
+
+
+def test_waterfill_scales_to_k100():
+    rng = np.random.default_rng(0)
+    prob = _rand_problem(rng, 100)
+    wf = solve_waterfill(prob)
+    pgd = dinkelbach(prob, inner="pgd")
+    assert wf.objective <= pgd.objective * 1.001 + 1e-12
+
+
+def test_dinkelbach_monotone_lambda():
+    """Dinkelbach lambda sequence is nondecreasing (ratio improves)."""
+    rng = np.random.default_rng(3)
+    prob = _rand_problem(rng, 6)
+    lams = []
+    beta = np.full(prob.K, 0.5)
+    lam = prob.h2(beta) / prob.h1(beta)
+    from repro.core.dinkelbach import inner_pgd, _eval_F
+    for _ in range(8):
+        beta = inner_pgd(prob, lam)
+        new_lam = prob.h2(beta) / prob.h1(beta)
+        lams.append(new_lam)
+        if abs(new_lam - lam) < 1e-15:
+            break
+        lam = new_lam
+    assert all(b >= a - 1e-9 for a, b in zip(lams, lams[1:]))
+
+
+def test_power_law_eq25_properties():
+    rho = np.array([1.0, 0.5, 0.3])
+    theta = np.array([0.2, 0.9, 0.5])
+    p_max = np.array([15.0, 15.0, 10.0])
+    for beta in (0.0, 0.3, 1.0):
+        p = np.asarray(power_from_beta(np.full(3, beta), rho, theta, p_max))
+        assert np.all(p >= 0) and np.all(p <= p_max + 1e-9)
+    # beta=1: pure staleness weighting; beta=0: pure similarity weighting
+    p1 = np.asarray(power_from_beta(np.ones(3), rho, theta, p_max))
+    np.testing.assert_allclose(p1, p_max * rho)
+    p0 = np.asarray(power_from_beta(np.zeros(3), rho, theta, p_max))
+    np.testing.assert_allclose(p0, p_max * theta)
+
+
+def test_staleness_factor_monotone():
+    s = np.arange(10).astype(float)
+    rho = np.asarray(staleness_factor(s, omega=3.0))
+    assert np.all(np.diff(rho) < 0)          # fresher -> more power
+    assert rho[0] == 1.0                     # s=0 -> full weight
+
+
+def test_similarity_factor_range():
+    cos = np.linspace(-1, 1, 21)
+    th = np.asarray(similarity_factor(cos))
+    assert th.min() >= 0 and th.max() <= 1
+    assert th[0] == 0.0 and th[-1] == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 10_000))
+def test_waterfill_never_worse_than_corners(k, seed):
+    """Property: the exact water-filling solution beats every {0,1}^K corner
+    (it is a global optimum over the box)."""
+    rng = np.random.default_rng(seed)
+    prob = _rand_problem(rng, k)
+    wf = solve_waterfill(prob)
+    for _ in range(10):
+        corner = rng.integers(0, 2, k).astype(float)
+        assert wf.objective <= prob.objective(corner) + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 10_000))
+def test_p2_objective_scale_invariance(k, seed):
+    """h1/h2 with c0=0 is invariant to uniformly scaling all powers —
+    the noise term is what makes absolute power matter."""
+    rng = np.random.default_rng(seed)
+    rho = rng.uniform(0.2, 1.0, k)
+    theta = rng.uniform(0.0, 1.0, k)
+    b = np.ones(k)
+    p0 = build_p2(rho, theta, np.full(k, 15.0), b, smooth_l=10.0,
+                  eps_bound=0.05, model_dim=8070, sigma_n2=0.0)
+    p1 = build_p2(rho, theta, np.full(k, 30.0), b, smooth_l=10.0,
+                  eps_bound=0.05, model_dim=8070, sigma_n2=0.0)
+    beta = rng.random(k)
+    assert p0.objective(beta) == pytest.approx(p1.objective(beta), rel=1e-9)

@@ -1,0 +1,126 @@
+"""Model-level property tests (hypothesis + targeted invariants):
+causality, RoPE shift behaviour, MoE conservation, aggregation algebra."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.models import forward, init_model
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-370m", "zamba2-7b",
+                                  "mixtral-8x22b", "granite-3-8b"])
+def test_causality_future_tokens_do_not_affect_past(arch):
+    """Changing tokens after position t0 must leave logits[:, :t0] unchanged
+    — holds for causal attention, SSD scans, SWA and MoE routing alike."""
+    cfg = get_reduced(arch)
+    rng = np.random.default_rng(0)
+    b, t, t0 = 2, 24, 10
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    toks = rng.integers(0, cfg.vocab_size, (b, t)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[:, t0:] = rng.integers(0, cfg.vocab_size, (b, t - t0))
+    l1, _, _ = forward(params, {"tokens": jnp.asarray(toks)}, cfg)
+    l2, _, _ = forward(params, {"tokens": jnp.asarray(toks2)}, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, :t0]), np.asarray(l2[:, :t0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_encoder_is_not_causal():
+    """hubert (bidirectional): changing late frames MUST change early
+    outputs — the inverse of the causality property."""
+    cfg = get_reduced("hubert-xlarge")
+    rng = np.random.default_rng(0)
+    b, t = 1, 24
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    feats = rng.normal(size=(b, t, cfg.frontend_dim)).astype(np.float32)
+    feats2 = feats.copy()
+    feats2[:, 20:] += 3.0
+    mk = {"mask_indicator": jnp.zeros((b, t), jnp.int32),
+          "targets": jnp.zeros((b, t), jnp.int32)}
+    l1, _, _ = forward(params, {"frame_feats": jnp.asarray(feats), **mk}, cfg)
+    l2, _, _ = forward(params, {"frame_feats": jnp.asarray(feats2), **mk}, cfg)
+    assert float(jnp.max(jnp.abs(l1[:, :10] - l2[:, :10]))) > 1e-4
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE attention scores depend only on relative positions: shifting
+    all positions by a constant leaves the attention output unchanged."""
+    from repro.models import layers as L
+    cfg = get_reduced("smollm-135m")
+    rng = np.random.default_rng(0)
+    b, t = 1, 16
+    params = L.init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(b, t, cfg.d_model)), jnp.float32)
+    pos0 = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    out0, _ = L.apply_attention(params, x, cfg, pos0)
+    out7, _ = L.apply_attention(params, x, cfg, pos0 + 700)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out7),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_moe_dropless_output_is_convex_combination(seed):
+    """With dropless capacity, each token's MoE output equals the
+    router-weighted sum of per-expert FFN outputs computed densely."""
+    from repro.models.moe import apply_moe, router_topk
+    import repro.models.moe as MOE
+    cfg = dataclasses.replace(get_reduced("mixtral-8x22b"),
+                              capacity_factor=8.0)
+    rng = np.random.default_rng(seed)
+    params = MOE.init_moe(jax.random.PRNGKey(seed % 97), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 8, cfg.d_model)), jnp.float32)
+    got, _ = apply_moe(params, x, cfg)
+
+    logits = x.reshape(8, -1) @ params["router"]["w"]
+    w, _ = router_topk(logits, cfg)                      # (8, E)
+    xs = x.reshape(8, -1)
+    dense = []
+    for e in range(cfg.num_experts):
+        h = jax.nn.silu(xs @ params["gate"][e]) * (xs @ params["up"][e])
+        dense.append(h @ params["down"][e])
+    dense = jnp.stack(dense, axis=1)                     # (8, E, d)
+    want = jnp.einsum("te,ted->td", w.astype(jnp.float32), dense)
+    np.testing.assert_allclose(np.asarray(got.reshape(8, -1)),
+                               np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 10_000))
+def test_aggregation_scale_invariance(k, seed):
+    """alpha weights (eq. 8) are invariant to uniformly scaling all powers;
+    the noiseless aggregate therefore is too."""
+    from repro.core.aircomp import aircomp_aggregate
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(k, 32)), jnp.float32)
+    p = jnp.asarray(rng.random(k) + 0.1, jnp.float32)
+    b = jnp.ones(k, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    a1, _ = aircomp_aggregate(x, p, b, key, 0.0)
+    a2, _ = aircomp_aggregate(x, 7.5 * p, b, key, 0.0)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paota_delta_mode_noiseless_equals_model_mode():
+    """With zero channel noise and s_k = 0 for all clients, delta- and
+    model-transmission produce the same global model."""
+    from repro.core.aggregation import paota_aggregate_stacked
+    rng = np.random.default_rng(0)
+    k, d = 4, 64
+    start = rng.normal(size=d).astype(np.float32)
+    deltas = rng.normal(size=(k, d)).astype(np.float32)
+    models = start[None] + deltas
+    p = jnp.asarray(rng.random(k) + 0.1, jnp.float32)
+    b = jnp.ones(k, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    agg_m, _ = paota_aggregate_stacked(jnp.asarray(models), p, b, key, 0.0)
+    agg_d, _ = paota_aggregate_stacked(jnp.asarray(deltas), p, b, key, 0.0)
+    np.testing.assert_allclose(np.asarray(agg_m),
+                               start + np.asarray(agg_d), rtol=2e-5,
+                               atol=2e-5)

@@ -1,0 +1,92 @@
+"""Semi-async scheduler + Theorem-1 bound tests."""
+import numpy as np
+import pytest
+
+from repro.core.convergence import (BoundConstants, bound_trajectory,
+                                    contraction_A, gap_G)
+from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
+
+
+def _run(sched, rounds):
+    history = []
+    for _ in range(rounds):
+        upl, stal = sched.advance_to_aggregation()
+        history.append((upl, stal))
+        sched.start_round(upl)
+    return history
+
+
+def test_scheduler_periodic_clock():
+    s = SemiAsyncScheduler(SchedulerConfig(n_clients=10, delta_t=8.0, seed=0))
+    _run(s, 5)
+    assert s.time == pytest.approx(40.0)     # fixed-period: 5 * delta_t
+
+
+def test_scheduler_semi_async_participation():
+    """With latency U(5,15) and delta_t=8, some but not all clients upload
+    each round, and staleness > 0 occurs (the semi-async regime)."""
+    s = SemiAsyncScheduler(SchedulerConfig(n_clients=100, delta_t=8.0, seed=1))
+    history = _run(s, 10)
+    parts = [len(u) for u, _ in history[1:]]
+    stals = np.concatenate([st[u] for u, st in history[1:]])
+    assert 0 < min(parts) and max(parts) < 100
+    assert stals.max() >= 1                  # stragglers exist
+    assert stals.max() <= 3                  # U(5,15) -> at most ~2 periods
+
+
+def test_scheduler_deterministic_given_seed():
+    a = SemiAsyncScheduler(SchedulerConfig(n_clients=20, seed=7))
+    b = SemiAsyncScheduler(SchedulerConfig(n_clients=20, seed=7))
+    for _ in range(4):
+        ua, sa = a.advance_to_aggregation()
+        ub, sb = b.advance_to_aggregation()
+        np.testing.assert_array_equal(ua, ub)
+        np.testing.assert_array_equal(sa, sb)
+        a.start_round(ua)
+        b.start_round(ub)
+
+
+def test_sync_round_slower_than_paota_period():
+    """The paper's wall-clock claim: sync rounds wait for the max of
+    participant latencies (mean ~ 14s for 50 draws of U(5,15)) while PAOTA
+    rounds are fixed at delta_t = 8s."""
+    s = SemiAsyncScheduler(SchedulerConfig(n_clients=100, seed=0))
+    times = [s.sync_round_time(50) for _ in range(50)]
+    assert np.mean(times) > 8.0
+
+
+def test_contraction_A_below_one_for_paper_setting():
+    c = BoundConstants(eta=0.002, local_steps=5, smooth_l=10.0, delta=0.001,
+                       vartheta=0.5)
+    assert contraction_A(c) < 1.0
+
+
+def test_contraction_A_diverges_for_large_lr():
+    c = BoundConstants(eta=0.05, local_steps=5, smooth_l=10.0)
+    assert contraction_A(c) >= 1.0 or contraction_A(c) == np.inf
+
+
+def test_gap_terms_positive_and_power_sensitivity():
+    c = BoundConstants()
+    alphas = np.full(10, 0.1)
+    g_lo = gap_G(c, alphas, sum_bp=10.0, model_dim=8070, sigma_n2=1e-4)
+    g_hi = gap_G(c, alphas, sum_bp=100.0, model_dim=8070, sigma_n2=1e-4)
+    assert all(v > 0 for k, v in g_lo.items() if k in "abcde")
+    assert g_hi["e"] < g_lo["e"]             # more power -> less noise term
+    # concentrated weights worsen term (d) (staleness variance)
+    conc = np.zeros(10)
+    conc[0] = 1.0
+    g_conc = gap_G(c, conc, 10.0, 8070, 1e-4)
+    assert g_conc["d"] > g_lo["d"]
+
+
+def test_bound_trajectory_converges_when_contractive():
+    c = BoundConstants(eta=0.002, local_steps=5, smooth_l=10.0, delta=0.001,
+                       vartheta=0.5)
+    a = contraction_A(c)
+    assert a < 1
+    g = [0.05] * 200
+    traj = bound_trajectory(c, g, f0_gap=10.0)
+    # converges to the fixed point G/(1-A)
+    assert traj[-1] == pytest.approx(0.05 / (1 - a), rel=0.05)
+    assert traj[-1] < traj[0]

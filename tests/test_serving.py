@@ -1,0 +1,144 @@
+"""Serving-path integration: prefill -> cache hand-off -> decode must
+continue the sequence with logits matching the teacher-forced full
+forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import decode_step, forward, init_model
+from repro.models.transformer import cache_from_prefill
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "olmo-1b", "mamba2-370m",
+                                  "zamba2-7b", "mixtral-8x22b"])
+def test_prefill_then_decode_continuity(arch):
+    cfg = get_reduced(arch)
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    rng = np.random.default_rng(0)
+    b, t_pre, t_dec, ring = 2, 11, 5, 64
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t_pre + t_dec)),
+                       jnp.int32)
+
+    # reference: full forward over the whole sequence
+    full, _, _ = forward(params := init_model(jax.random.PRNGKey(0), cfg),
+                         {"tokens": toks}, cfg)
+
+    # prefill the first t_pre tokens, convert, then decode the rest
+    logits_pre, _, caches = forward(params, {"tokens": toks[:, :t_pre]}, cfg,
+                                    return_cache=True)
+    state = cache_from_prefill(caches, cfg, b, ring, t_pre)
+    outs = []
+    for i in range(t_dec):
+        lg, state = decode_step(params, toks[:, t_pre + i:t_pre + i + 1],
+                                state, jnp.int32(t_pre + i), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(full[:, t_pre:t_pre + t_dec]),
+                               rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(logits_pre[:, -1]),
+                               np.asarray(full[:, t_pre - 1]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_prefill_longer_than_ring_window():
+    """SWA arch: prefill longer than the ring buffer must keep only the
+    last `window` keys and still match the windowed full forward."""
+    cfg = dataclasses.replace(get_reduced("smollm-135m"), sliding_window=8)
+    rng = np.random.default_rng(1)
+    b, t_pre, t_dec = 1, 21, 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t_pre + t_dec)),
+                       jnp.int32)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    full, _, _ = forward(params, {"tokens": toks}, cfg)
+    _, _, caches = forward(params, {"tokens": toks[:, :t_pre]}, cfg,
+                           return_cache=True)
+    state = cache_from_prefill(caches, cfg, b, 64, t_pre)
+    assert state["k"].shape[2] == 8
+    outs = []
+    for i in range(t_dec):
+        lg, state = decode_step(params, toks[:, t_pre + i:t_pre + i + 1],
+                                state, jnp.int32(t_pre + i), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec),
+                               np.asarray(full[:, t_pre:t_pre + t_dec]),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_hubert_masked_prediction_learns():
+    """Encoder path: a few SGD steps on fixed batch reduce the masked-
+    prediction loss (the audio family's train objective)."""
+    from repro.models.transformer import loss_fn
+    cfg = get_reduced("hubert-xlarge")
+    rng = np.random.default_rng(0)
+    b, t = 2, 48
+    batch = {
+        "frame_feats": jnp.asarray(rng.normal(size=(b, t, cfg.frontend_dim)),
+                                   jnp.float32),
+        "mask_indicator": jnp.asarray(rng.random((b, t)) < 0.3, jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)),
+                               jnp.int32),
+    }
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(lambda p: jax.value_and_grad(
+        lambda q: loss_fn(q, batch, cfg)[0])(p))
+    l0 = None
+    for _ in range(8):
+        l, g = step(params)
+        if l0 is None:
+            l0 = float(l)
+        params = jax.tree_util.tree_map(lambda a, b: a - 0.1 * b, params, g)
+    assert float(l) < l0 - 0.2
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "granite-3-8b"])
+def test_int8_kv_cache_decode_accuracy(arch):
+    """kv_quant=True: int8 cache + scale-folded attention must track the
+    fp full forward within quantization tolerance (§Perf iter E)."""
+    cfg = dataclasses.replace(get_reduced(arch), kv_quant=True)
+    rng = np.random.default_rng(0)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    t = 15
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, t)), jnp.int32)
+    full, _, _ = forward(params, {"tokens": toks}, cfg)
+    from repro.models import init_decode_state
+    state = init_decode_state(cfg, 2, 64)
+    assert state["k"].dtype == jnp.int8
+    assert state["k_scale"].dtype == jnp.float16
+    outs = []
+    for i in range(t):
+        lg, state = decode_step(params, toks[:, i:i + 1], state,
+                                jnp.int32(i), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(dec - full))) / float(jnp.max(jnp.abs(full)))
+    assert rel < 0.02
+
+
+def test_int8_kv_prefill_handoff():
+    cfg = dataclasses.replace(get_reduced("smollm-135m"), kv_quant=True)
+    rng = np.random.default_rng(2)
+    b, t_pre, t_dec = 2, 9, 4
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t_pre + t_dec)),
+                       jnp.int32)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    full, _, _ = forward(params, {"tokens": toks}, cfg)
+    _, _, caches = forward(params, {"tokens": toks[:, :t_pre]}, cfg,
+                           return_cache=True)
+    state = cache_from_prefill(caches, cfg, b, 64, t_pre)
+    assert state["k"].dtype == jnp.int8
+    outs = []
+    for i in range(t_dec):
+        lg, state = decode_step(params, toks[:, t_pre + i:t_pre + i + 1],
+                                state, jnp.int32(t_pre + i), cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    rel = (float(jnp.max(jnp.abs(dec - full[:, t_pre:t_pre + t_dec])))
+           / float(jnp.max(jnp.abs(full))))
+    assert rel < 0.02
