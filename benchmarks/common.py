@@ -38,6 +38,7 @@ class BenchSetting:
     eval_every: int = 2
     seed: int = 0
     solver: str = "waterfill"
+    engine: str = "batched"      # local-training engine: batched|legacy
 
     @classmethod
     def from_env(cls, **kw):
@@ -74,13 +75,16 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
                             seed=s.seed + seed_offset)
     if name == "paota":
         srv = PAOTAServer(params, clients, chan, sched,
-                          PAOTAConfig(solver=s.solver, seed=s.seed))
+                          PAOTAConfig(solver=s.solver, seed=s.seed,
+                                      engine=s.engine))
     elif name == "local_sgd":
         srv = LocalSGDServer(params, clients, sched,
-                             SyncConfig(n_select=s.n_select, seed=s.seed))
+                             SyncConfig(n_select=s.n_select, seed=s.seed,
+                                        engine=s.engine))
     elif name == "cotaf":
         srv = COTAFServer(params, clients, sched,
-                          SyncConfig(n_select=s.n_select, seed=s.seed), chan)
+                          SyncConfig(n_select=s.n_select, seed=s.seed,
+                                     engine=s.engine), chan)
     else:
         raise ValueError(name)
 

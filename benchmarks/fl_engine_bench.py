@@ -1,0 +1,112 @@
+"""Federation-engine benchmark: legacy per-client loop vs batched
+vmap/scan engine.
+
+Two levels per K in {12, 100, 1000}:
+
+* ``fl_engine/{engine}_k{K}`` — the engine alone: one full-federation
+  broadcast (`engine.local_train` on all K clients, M=5 local steps
+  each), steady-state after compile. This is the apples-to-apples number
+  behind the speedup row: identical math, identical minibatch streams.
+* ``fl_engine/server_{engine}_k{K}`` — full PAOTA server round
+  (scheduler + P2 solve + AirComp on top of the engine), the end-to-end
+  rounds/sec a training run sees.
+
+The legacy engine re-jits one SGD step per client (K compiles, reported
+as setup_s) and makes M host round-trips per client per broadcast; it is
+measured only up to K=100 by default — at K=1000 it would spend minutes
+compiling 1000 jit caches. Set REPRO_BENCH_FULL=1 to force it. The
+batched engine compiles ONCE per federation; a small per-client size
+ladder at K=1000 keeps the padded (K, n_max, 784) federation ~200 MB so
+the round completes on CPU.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation
+from repro.data.synthetic import make_mnist_like
+from repro.fl import FLClient, PAOTAConfig, PAOTAServer, make_engine
+from repro.models.mlp import init_mlp_params, mlp_loss
+
+_SIZES = {1000: (48, 64)}
+
+
+def _make_clients(k: int, seed: int = 0):
+    x, y, _, _ = make_mnist_like(n_train=min(max(100 * k, 2000), 20000),
+                                 n_test=10, seed=1234)
+    parts = partition_noniid(y, n_clients=k, sizes=_SIZES.get(k), seed=seed)
+    fed = build_federation(x, y, parts, seed=seed)
+    return [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+            for d in fed]
+
+
+def _median_time(fn, reps: int) -> float:
+    """Median of per-call wall times — robust to background-load spikes."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _time_engine(kind: str, k: int, reps: int, seed: int = 0):
+    """(seconds per full-federation broadcast, setup seconds). Setup is
+    engine construction + first call — i.e. all compilation."""
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    ids = np.arange(k)
+    t0 = time.perf_counter()
+    eng = make_engine(_make_clients(k, seed), kind)
+    eng.local_train(params, ids)
+    setup = time.perf_counter() - t0
+    return _median_time(lambda: eng.local_train(params, ids), reps), setup
+
+
+def _time_server(kind: str, k: int, reps: int, seed: int = 0):
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    srv = PAOTAServer(params, _make_clients(k, seed), ChannelConfig(),
+                      SchedulerConfig(n_clients=k, seed=seed),
+                      PAOTAConfig(engine=kind, seed=seed))
+    srv.round()  # warmup round (hits every remaining compile path)
+    setup = time.perf_counter() - t0
+    return _median_time(srv.round, reps), setup
+
+
+def run():
+    full = os.environ.get("REPRO_BENCH_FULL") == "1"
+    rows = []
+    for k in (12, 100, 1000):
+        reps = 3 if k >= 1000 else 7
+        per = {}
+        for kind in ("legacy", "batched"):
+            if kind == "legacy" and k >= 1000 and not full:
+                continue  # ~1000 separate jit compiles; REPRO_BENCH_FULL=1
+            sec, setup = _time_engine(kind, k, reps)
+            per[kind] = sec
+            rows.append({"name": f"fl_engine/{kind}_k{k}",
+                         "us_per_call": round(sec * 1e6, 1),
+                         "derived": f"broadcasts_per_sec={1.0 / sec:.3f};"
+                                    f"setup_s={setup:.2f}"})
+            ssec, ssetup = _time_server(kind, k, reps)
+            rows.append({"name": f"fl_engine/server_{kind}_k{k}",
+                         "us_per_call": round(ssec * 1e6, 1),
+                         "derived": f"rounds_per_sec={1.0 / ssec:.3f};"
+                                    f"setup_s={ssetup:.2f}"})
+        if "legacy" in per and "batched" in per:
+            rows.append({"name": f"fl_engine/speedup_k{k}",
+                         "us_per_call": 0,
+                         "derived": f"{per['legacy'] / per['batched']:.2f}x"})
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bound    — Theorem-1 contraction + P2 gap terms (convergence machinery)
   kernels  — aggregation/cosine/SWA kernel characteristics
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
+  fl_engine — legacy vs batched federation engine rounds/sec (K up to 1000)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
@@ -17,9 +18,10 @@ from __future__ import annotations
 import sys
 import traceback
 
-MODULES = ["bound", "kernels_bench", "roofline_bench", "fig3", "fig4",
-           "table1", "ablation"]
-ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench"}
+MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
+           "fig3", "fig4", "table1", "ablation"]
+ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
+           "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench"}
 
 
 def main() -> None:

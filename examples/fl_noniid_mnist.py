@@ -18,11 +18,16 @@ def main():
     ap.add_argument("--n0", type=float, default=-174.0)
     ap.add_argument("--solver", default="waterfill",
                     choices=["waterfill", "pgd", "milp"])
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "legacy"],
+                    help="local-training engine (batched = one jitted "
+                         "vmap/scan call per broadcast)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
     s = BenchSetting.from_env(n_rounds=args.rounds, n_clients=args.clients,
-                              n0_dbm_hz=args.n0, solver=args.solver)
+                              n0_dbm_hz=args.n0, solver=args.solver,
+                              engine=args.engine)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

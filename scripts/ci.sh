@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# CI driver.
+#
+#   scripts/ci.sh          fast tier: everything not marked `slow` (<60s)
+#   CI_FULL=1 scripts/ci.sh   full suite (nightly-style, ~4-5 min on CPU)
+#   CI_BENCH=1 scripts/ci.sh  also run the engine benchmark after tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${CI_FULL:-0}" = "1" ]; then
+    python -m pytest -q
+else
+    python -m pytest -q -m "not slow"
+fi
+
+if [ "${CI_BENCH:-0}" = "1" ]; then
+    python -m benchmarks.run fl_engine
+fi

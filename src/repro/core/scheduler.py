@@ -11,11 +11,18 @@ Latency model (Section IV-A): per-session compute time ~ U(lat_lo, lat_hi)
 seconds (default U(5,15)); PAOTA period delta_t = 8 s. For the synchronous
 baselines the round time is max over participating clients (bottleneck
 node) — that asymmetry is exactly what Table I measures.
+
+``SemiAsyncScheduler`` keeps the whole client state as numpy arrays
+(ready bits, busy-until clocks, model rounds) so a 1000+-client round is
+a handful of vector ops. ``ScalarSemiAsyncScheduler`` is the seed's
+per-client-loop implementation, kept as the reference: both consume the
+PCG64 stream identically (one uniform per broadcast client, in id order),
+so they match draw-for-draw (tests/test_scheduler_vectorized.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List
+from dataclasses import dataclass
+from typing import List, Tuple
 
 import numpy as np
 
@@ -38,21 +45,69 @@ class SchedulerConfig:
 
 
 class SemiAsyncScheduler:
-    """Event-driven simulation of PAOTA's periodic aggregation."""
+    """Vectorized simulation of PAOTA's periodic aggregation (array state)."""
 
     def __init__(self, cfg: SchedulerConfig):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.time = 0.0
         self.round = 0
-        self.clients: List[ClientState] = [ClientState() for _ in range(cfg.n_clients)]
+        self.ready = np.ones(cfg.n_clients, dtype=bool)
+        self.busy_until = np.zeros(cfg.n_clients)
+        self.model_round = np.zeros(cfg.n_clients, dtype=np.int64)
 
     def _draw_latency(self, size=None):
         return self.rng.uniform(self.cfg.lat_lo, self.cfg.lat_hi, size)
 
     def start_round(self, participant_ids):
         """Broadcast: clients in `participant_ids` receive w_g^r and begin
-        local training; each gets a fresh latency draw."""
+        local training; each gets a fresh latency draw (one per client, in
+        id order — the same stream consumption as the scalar reference)."""
+        ids = np.asarray(participant_ids, dtype=np.int64)
+        if ids.size == 0:
+            return
+        lat = self._draw_latency(ids.size)
+        self.ready[ids] = False
+        self.model_round[ids] = self.round
+        self.busy_until[ids] = self.time + lat
+
+    def advance_to_aggregation(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Advance sim clock by delta_t; returns (uploaders, staleness array).
+
+        uploaders: indices with b_k = 1 at the aggregation slot (finished
+        local training during this period). staleness[k] = s_k^r.
+        """
+        self.time += self.cfg.delta_t
+        self.ready |= self.busy_until <= self.time
+        stal = np.where(self.ready, self.round - self.model_round, 0)
+        uploaders = np.flatnonzero(self.ready).astype(np.int64)
+        self.round += 1
+        return uploaders, stal.astype(np.int64)
+
+    # ------------------------------------------------------------------
+    # synchronous baselines' clock (Local SGD / COTAF): wait for stragglers
+    # ------------------------------------------------------------------
+    def sync_round_time(self, n_participants: int) -> float:
+        """Round duration = max of n participant latency draws (bottleneck)."""
+        return float(np.max(self._draw_latency(n_participants)))
+
+
+class ScalarSemiAsyncScheduler:
+    """Seed implementation: per-client Python loop. Reference for the
+    vectorized scheduler's draw-for-draw parity tests."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.time = 0.0
+        self.round = 0
+        self.clients: List[ClientState] = [ClientState()
+                                           for _ in range(cfg.n_clients)]
+
+    def _draw_latency(self, size=None):
+        return self.rng.uniform(self.cfg.lat_lo, self.cfg.lat_hi, size)
+
+    def start_round(self, participant_ids):
         for k in participant_ids:
             c = self.clients[k]
             c.ready = False
@@ -60,11 +115,6 @@ class SemiAsyncScheduler:
             c.busy_until = self.time + float(self._draw_latency())
 
     def advance_to_aggregation(self):
-        """Advance sim clock by delta_t; returns (uploaders, staleness array).
-
-        uploaders: indices with b_k = 1 at the aggregation slot (finished
-        local training during this period). staleness[k] = s_k^r.
-        """
         self.time += self.cfg.delta_t
         uploaders = []
         stal = np.zeros(self.cfg.n_clients, dtype=np.int64)
@@ -78,9 +128,5 @@ class SemiAsyncScheduler:
         self.round += 1
         return np.array(uploaders, dtype=np.int64), stal
 
-    # ------------------------------------------------------------------
-    # synchronous baselines' clock (Local SGD / COTAF): wait for stragglers
-    # ------------------------------------------------------------------
     def sync_round_time(self, n_participants: int) -> float:
-        """Round duration = max of n participant latency draws (bottleneck)."""
         return float(np.max(self._draw_latency(n_participants)))

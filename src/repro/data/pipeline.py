@@ -1,6 +1,20 @@
 """Minibatch pipeline for federated clients: deterministic, stateless
-shuffled batching (reshuffle each epoch from a fold-in seed)."""
+shuffled batching (reshuffle each epoch from a fold-in seed).
+
+Two consumers share ONE index-selection code path (``ClientData
+.batch_indices``) so they are reproducible against each other:
+
+* the legacy per-client loop (``FLClient.local_train``) gathers the
+  selected rows on host, one minibatch at a time;
+* the batched federation engine (``repro.fl.engine.BatchedEngine``)
+  stacks the per-round index plans into a ``(K, M, B)`` tensor and
+  gathers on device from the padded federation built by
+  ``stack_federation``.
+"""
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 
@@ -13,26 +27,80 @@ class ClientData:
         self.client_id = client_id
         self._seed = seed
         self._epoch = 0
+        self._order_cache = (-1, None)   # (epoch, permutation)
 
     def __len__(self):
         return len(self.y)
 
-    def batches(self, batch_size: int, n_batches: int):
-        """Yield n_batches minibatches, cycling+reshuffling as needed."""
-        rng = np.random.default_rng((self._seed, self.client_id, self._epoch))
-        order = rng.permutation(len(self.y))
+    def _epoch_order(self) -> np.ndarray:
+        # memoized per epoch: the permutation is a pure function of
+        # (seed, client_id, epoch), and successive local_train calls often
+        # resume mid-epoch
+        if self._order_cache[0] != self._epoch:
+            rng = np.random.default_rng(
+                (self._seed, self.client_id, self._epoch))
+            self._order_cache = (self._epoch, rng.permutation(len(self.y)))
+        return self._order_cache[1]
+
+    def batch_indices(self, batch_size: int, n_batches: int):
+        """Yield n_batches index arrays into (x, y), cycling+reshuffling as
+        needed. This is the single source of truth for batch selection —
+        both the legacy loop and the batched engine consume it, which is
+        what makes the two engines reproducible against each other."""
+        order = self._epoch_order()
         i = 0
         for _ in range(n_batches):
             if i + batch_size > len(order):
                 self._epoch += 1
-                rng = np.random.default_rng(
-                    (self._seed, self.client_id, self._epoch))
-                order = rng.permutation(len(self.y))
+                order = self._epoch_order()
                 i = 0
             sel = order[i:i + batch_size]
             i += batch_size
+            yield sel
+
+    def batches(self, batch_size: int, n_batches: int):
+        """Yield n_batches minibatches, cycling+reshuffling as needed."""
+        for sel in self.batch_indices(batch_size, n_batches):
             yield {"x": self.x[sel], "y": self.y[sel]}
 
 
 def build_federation(x, y, parts, seed: int = 0):
     return [ClientData(x[p], y[p], k, seed) for k, p in enumerate(parts)]
+
+
+@dataclass
+class StackedFederation:
+    """Padded device-friendly view of a federation: per-client datasets
+    stacked into ``(K, n_max, ...)`` arrays.
+
+    Rows beyond ``n_samples[k]`` are zero padding. Batch-index plans from
+    ``ClientData.batch_indices`` never point into the padding (they are
+    drawn from ``range(n_samples[k])``), so no additional masking is
+    needed on the gather path; ``mask`` is provided for consumers that
+    reduce over the sample axis directly.
+    """
+    x: np.ndarray            # (K, n_max, d) float32, zero-padded
+    y: np.ndarray            # (K, n_max) int32, zero-padded
+    n_samples: np.ndarray    # (K,) int64 true per-client sizes
+    mask: np.ndarray         # (K, n_max) float32, 1.0 on real rows
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.n_samples)
+
+
+def stack_federation(fed: List[ClientData]) -> StackedFederation:
+    """Pad+stack per-client (ragged) datasets into (K, n_max, ...) arrays."""
+    if not fed:
+        raise ValueError("empty federation")
+    sizes = np.array([len(c) for c in fed], dtype=np.int64)
+    n_max = int(sizes.max())
+    d_feat = fed[0].x.shape[1]
+    x = np.zeros((len(fed), n_max, d_feat), np.float32)
+    y = np.zeros((len(fed), n_max), np.int32)
+    mask = np.zeros((len(fed), n_max), np.float32)
+    for k, c in enumerate(fed):
+        x[k, :len(c)] = c.x
+        y[k, :len(c)] = c.y
+        mask[k, :len(c)] = 1.0
+    return StackedFederation(x=x, y=y, n_samples=sizes, mask=mask)

@@ -23,18 +23,21 @@ import numpy as np
 from repro.core.aircomp import ChannelConfig
 from repro.core.aggregation import ravel
 from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
+from repro.fl.engine import make_engine
 
 
 @dataclass
 class SyncConfig:
-    n_select: int = 50           # participants per round (fairness: matched
-    seed: int = 0                # to PAOTA's mean participation)
+    n_select: int = 50           # participants per round (fairness:
+                                 # matched to PAOTA's mean participation)
+    engine: str = "batched"      # local-training engine: batched|legacy
+    seed: int = 0
 
 
 class _SyncServerBase:
     def __init__(self, init_params, clients: List, sched_cfg: SchedulerConfig,
                  cfg: SyncConfig):
-        self.clients = clients
+        self.engine = make_engine(clients, cfg.engine)
         self.cfg = cfg
         self.scheduler = SemiAsyncScheduler(sched_cfg)
         vec, self.unravel = ravel(init_params)
@@ -48,18 +51,15 @@ class _SyncServerBase:
         return self.unravel(jnp.asarray(self.global_vec))
 
     def _select(self):
-        n = min(self.cfg.n_select, len(self.clients))
-        return self.rng.choice(len(self.clients), size=n, replace=False)
+        n = min(self.cfg.n_select, self.engine.n_clients)
+        return self.rng.choice(self.engine.n_clients, size=n, replace=False)
 
     def _train_selected(self, sel):
+        """One fused device call under the batched engine (K-client vmap)."""
         params = self.unravel(jnp.asarray(self.global_vec))
-        outs, weights = [], []
-        for k in sel:
-            trained = self.clients[k].local_train(params)
-            tv, _ = ravel(trained)
-            outs.append(np.asarray(tv))
-            weights.append(self.clients[k].n_samples)
-        return np.stack(outs), np.asarray(weights, float)
+        outs = self.engine.local_train(params, sel)
+        weights = self.engine.n_samples[np.asarray(sel, np.int64)]
+        return outs, np.asarray(weights, float)
 
     def _advance_clock(self, n):
         # synchronous: wait for the slowest selected client (bottleneck)

@@ -28,9 +28,14 @@ class FLClient:
         return jax.tree_util.tree_map(lambda p, gg: p - self.lr * gg, params, g)
 
     def local_train(self, params):
-        """w_k = w_g - eta * sum_m grad F_k (eq. 3): M minibatch SGD steps."""
-        for batch in self.data.batches(self.batch_size, self.local_steps):
-            jb = {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])}
+        """w_k = w_g - eta * sum_m grad F_k (eq. 3): M minibatch SGD steps.
+
+        Batch selection goes through ``ClientData.batch_indices`` — the same
+        index plan the batched engine consumes — so the two engines see
+        identical minibatches at identical RNG state."""
+        for sel in self.data.batch_indices(self.batch_size, self.local_steps):
+            jb = {"x": jnp.asarray(self.data.x[sel]),
+                  "y": jnp.asarray(self.data.y[sel])}
             params = self._step(params, jb)
         return params
 

@@ -1,0 +1,144 @@
+"""Federation engines: who runs the M local SGD steps for a set of clients.
+
+``LegacyEngine`` is the seed implementation — a Python loop over
+``FLClient.local_train``, one jit cache per client, ``local_steps`` host
+round-trips per client per round. Kept as the reference for equivalence
+tests and as the slow baseline in ``benchmarks/fl_engine_bench.py``.
+
+``BatchedEngine`` is the scaled implementation: the whole federation's
+data lives device-resident as padded ``(K, n_max, ...)`` arrays
+(``repro.data.pipeline.stack_federation``), and one jitted function runs
+``lax.scan`` over the M local steps inside ``jax.vmap`` over the K
+clients. One compilation covers every round at every participation
+pattern; the per-round host work is only the numpy batch-index planning.
+
+Determinism/equivalence contract: both engines draw minibatch indices
+from the same stateful ``ClientData.batch_indices`` stream, so with equal
+seeds they train on identical sample sequences and produce global models
+equal up to float-reduction reordering (verified by
+tests/test_engine_equivalence.py with ``allclose``).
+
+Masking semantics for a partial broadcast (only ``ids`` restart): the
+batched call still executes the fused K-client computation — clients
+outside ``ids`` get an all-zeros index plan and their (discarded) output
+row is never read; their epoch cursors do not advance. Padding rows of
+ragged clients are never gathered because index plans are drawn from
+``range(n_k)`` only.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.data.pipeline import ClientData, stack_federation
+from repro.fl.client import FLClient
+
+
+class LegacyEngine:
+    """Reference engine: per-client Python loop (the seed behaviour)."""
+
+    name = "legacy"
+
+    def __init__(self, clients: List[FLClient]):
+        self.clients = clients
+        self.n_clients = len(clients)
+        self.n_samples = np.array([c.n_samples for c in clients], np.int64)
+
+    def local_train(self, params, ids: Sequence[int]) -> np.ndarray:
+        """Train clients `ids` from `params`; returns (len(ids), d) raveled
+        trained models, rows ordered as `ids`."""
+        out = []
+        for k in ids:
+            trained = self.clients[int(k)].local_train(params)
+            tv, _ = ravel_pytree(trained)
+            out.append(np.asarray(tv))
+        return np.stack(out) if out else np.zeros((0, 0))
+
+
+class BatchedEngine:
+    """vmap-over-clients, scan-over-steps engine: one compile per federation."""
+
+    name = "batched"
+
+    def __init__(self, fed: List[ClientData], loss_fn, batch_size: int = 32,
+                 lr: float = 0.05, local_steps: int = 5):
+        self.fed = fed  # epoch cursors (host-side batch planning) live here
+        self.loss_fn = loss_fn
+        self.batch_size = batch_size
+        self.lr = lr
+        self.local_steps = local_steps
+        self.n_clients = len(fed)
+        stacked = stack_federation(fed)
+        self.n_samples = stacked.n_samples
+        if int(self.n_samples.min()) < batch_size:
+            raise ValueError(
+                f"BatchedEngine needs n_k >= batch_size for fixed-shape "
+                f"minibatches (min n_k={int(self.n_samples.min())}, "
+                f"batch_size={batch_size}); use LegacyEngine for short-batch "
+                f"clients")
+        self._x = jnp.asarray(stacked.x)
+        self._y = jnp.asarray(stacked.y)
+        self._idx = np.zeros((self.n_clients, local_steps, batch_size),
+                             np.int32)
+        self._train = jax.jit(self._train_all)
+
+    @classmethod
+    def from_clients(cls, clients: List[FLClient]) -> "BatchedEngine":
+        """Build from a homogeneous FLClient list (same hyperparameters)."""
+        c0 = clients[0]
+        for c in clients[1:]:
+            if (c.loss_fn is not c0.loss_fn or c.batch_size != c0.batch_size
+                    or c.lr != c0.lr or c.local_steps != c0.local_steps):
+                raise ValueError("BatchedEngine requires homogeneous client "
+                                 "hyperparameters; got a mixed federation")
+        return cls([c.data for c in clients], c0.loss_fn,
+                   batch_size=c0.batch_size, lr=c0.lr,
+                   local_steps=c0.local_steps)
+
+    # ------------------------------------------------------------------
+    def _train_all(self, params, x, y, idx):
+        """params: pytree of (…) broadcast to every client; x/y: padded
+        (K, n_max, …) data; idx: (K, M, B) minibatch plans. Returns
+        (K, d) raveled trained models."""
+        def one_client(xc, yc, plan):
+            def step(p, sel):
+                batch = {"x": xc[sel], "y": yc[sel]}
+                g = jax.grad(self.loss_fn)(p, batch)
+                return jax.tree_util.tree_map(
+                    lambda pp, gg: pp - self.lr * gg, p, g), None
+            # M is small (a handful of local steps): full unroll lets XLA
+            # fuse across steps instead of paying while-loop overhead
+            p, _ = jax.lax.scan(step, params, plan, unroll=True)
+            return ravel_pytree(p)[0]
+
+        return jax.vmap(one_client)(x, y, idx)
+
+    def local_train(self, params, ids: Sequence[int]) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        self._idx[:] = 0
+        for k in ids:
+            self._idx[k] = np.stack(list(
+                self.fed[k].batch_indices(self.batch_size, self.local_steps)))
+        flat = self._train(params, self._x, self._y, jnp.asarray(self._idx))
+        # subset on device: only the requested rows cross to host
+        return np.asarray(flat[jnp.asarray(ids)])
+
+
+def make_engine(clients, kind: str = "batched"):
+    """Engine factory used by the servers.
+
+    `clients` may be an engine instance (returned unchanged), or a list of
+    FLClient to wrap in the requested engine kind.
+    """
+    if hasattr(clients, "local_train") and hasattr(clients, "n_clients"):
+        return clients
+    if kind == "batched":
+        return BatchedEngine.from_clients(list(clients))
+    if kind == "legacy":
+        return LegacyEngine(list(clients))
+    raise ValueError(f"unknown engine kind: {kind!r} "
+                     "(expected 'batched' or 'legacy')")

@@ -10,11 +10,17 @@ Per aggregation period (every delta_t seconds of simulated time):
      clipped by the instantaneous power constraint (7);
   4. AirComp-aggregate the stacked local models with AWGN (eqs. 6+8);
   5. broadcast w_g^{r+1} to the uploaders, who restart local training.
+
+Local training is delegated to a federation engine (repro.fl.engine):
+the default ``BatchedEngine`` runs all broadcast clients in one jitted
+vmap/scan call; ``engine="legacy"`` restores the seed's per-client loop
+(same minibatch streams — the two are allclose-equivalent, see
+tests/test_engine_equivalence.py).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +33,7 @@ from repro.core.dinkelbach import solve_p2
 from repro.core.power_control import (build_p2, cosine_similarity,
                                       similarity_factor, staleness_factor)
 from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
+from repro.fl.engine import make_engine
 
 
 @dataclass
@@ -36,6 +43,7 @@ class PAOTAConfig:
     smooth_l: float = 10.0        # L (Sec. IV-A)
     eps_bound: float = 0.05       # epsilon (Assumption 3)
     use_kernel: bool = False      # route aggregation through Pallas kernel
+    engine: str = "batched"       # local-training engine: batched|legacy
     transmit: str = "model"       # "model" (paper, eq. 6: clients transmit
                                   # w_k) | "delta" (beyond-paper: transmit
                                   # local updates; the power constraint (7)
@@ -46,9 +54,9 @@ class PAOTAConfig:
 
 
 class PAOTAServer:
-    def __init__(self, init_params, clients: List, chan: ChannelConfig,
+    def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig):
-        self.clients = clients
+        self.engine = make_engine(clients, cfg.engine)
         self.chan = chan
         self.cfg = cfg
         self.scheduler = SemiAsyncScheduler(sched_cfg)
@@ -57,22 +65,27 @@ class PAOTAServer:
         self.prev_global = self.global_vec.copy()
         self.d = len(self.global_vec)
         self.key = jax.random.PRNGKey(cfg.seed)
-        # in-flight local results: client -> (uploaded model vec, start vec)
-        self._pending: Dict[int, tuple] = {}
-        self._kick_off(list(range(len(clients))))
+        k_tot = self.engine.n_clients
+        # in-flight local results: trained model + the global it started from
+        self._pending_models = np.tile(self.global_vec, (k_tot, 1))
+        self._pending_starts = np.tile(self.global_vec, (k_tot, 1))
+        self._kick_off(np.arange(k_tot))
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
     def _kick_off(self, ids):
         """Broadcast current global model to `ids`; precompute their local
-        training result (deterministic — consumed when their latency ends)."""
+        training result (deterministic — consumed when their latency ends).
+        One fused device call under the batched engine."""
+        ids = np.asarray(ids, dtype=np.int64)
         start = self.global_vec.copy()
-        params = self.unravel(jnp.asarray(start))
         self.scheduler.start_round(ids)
-        for k in ids:
-            trained = self.clients[k].local_train(params)
-            tv, _ = ravel(trained)
-            self._pending[k] = (np.asarray(tv), start)
+        if ids.size == 0:
+            return
+        params = self.unravel(jnp.asarray(start))
+        trained = self.engine.local_train(params, ids)
+        self._pending_models[ids] = trained
+        self._pending_starts[ids] = start
 
     def global_params(self):
         return self.unravel(jnp.asarray(self.global_vec))
@@ -80,15 +93,12 @@ class PAOTAServer:
     # ------------------------------------------------------------------
     def round(self) -> dict:
         upl, stal = self.scheduler.advance_to_aggregation()
-        k_tot = len(self.clients)
+        k_tot = self.engine.n_clients
         b = np.zeros(k_tot)
         b[upl] = 1.0
 
-        stacked = np.stack([self._pending[k][0] if k in self._pending
-                            else self.global_vec for k in range(k_tot)])
-        starts = np.stack([self._pending[k][1] if k in self._pending
-                           else self.global_vec for k in range(k_tot)])
-        deltas = stacked - starts
+        stacked = self._pending_models
+        deltas = stacked - self._pending_starts
 
         # similarity factor vs last global direction (eq. 25)
         gdir = self.global_vec - self.prev_global
@@ -134,9 +144,7 @@ class PAOTAServer:
             self.global_vec = np.asarray(agg)
 
         # uploaders receive the new model and restart (Fig. 2 workflow)
-        for k in upl:
-            self._pending.pop(k, None)
-        self._kick_off(list(upl))
+        self._kick_off(upl)
 
         info = {"round": self.scheduler.round - 1,
                 "time": self.scheduler.time,

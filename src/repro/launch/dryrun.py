@@ -60,8 +60,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+        from repro.roofline.analysis import cost_analysis_dict
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
     finally:
         pass  # set_mesh(None) unsupported; next run_one overwrites the mesh

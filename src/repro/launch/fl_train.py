@@ -3,7 +3,12 @@
 Thin CLI over examples/fl_noniid_mnist.py:
 
     PYTHONPATH=src python -m repro.launch.fl_train --rounds 100 \
-        --clients 100 --solver waterfill
+        --clients 100 --solver waterfill --engine batched
+
+``--engine batched`` (default) runs local training as one jitted
+vmap/scan call over the whole federation; ``--engine legacy`` restores
+the seed's per-client loop (see EXPERIMENTS.md §Batched federation
+engine).
 """
 from examples.fl_noniid_mnist import main
 

@@ -55,6 +55,15 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * nb
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a dict, newer ones a one-element list of dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Sum of result bytes per collective kind from optimized HLO text.
 

@@ -81,6 +81,20 @@ def _symbols(lines: List[str]) -> Dict[str, str]:
     return sym
 
 
+def _op_operands(line: str, op: str) -> List[str]:
+    """Operand names of ``op(...)``. Handles both bare-name operands
+    (``dot(%a, %b)``) and typed operands as printed by newer XLA
+    (``dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)``)."""
+    m = re.search(rf"\b{op}\(([^)]*)\)", line)
+    if not m:
+        return []
+    names = re.findall(r"%([\w\.\-]+)", m.group(1))
+    if names:
+        return names
+    # very old printers omit the %-sigil entirely
+    return [tok.strip() for tok in m.group(1).split(",") if tok.strip()]
+
+
 def _dot_flops(line: str, sym: Dict[str, str]) -> float:
     m = _DEF.match(line)
     if not m:
@@ -89,10 +103,10 @@ def _dot_flops(line: str, sym: Dict[str, str]) -> float:
     if not out_shapes:
         return 0.0
     out_elems = _shape_elems(out_shapes[0][1])
-    ops = re.search(r"dot\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", line)
-    if not ops:
+    ops = _op_operands(line, "dot")
+    if len(ops) < 2:
         return 0.0
-    lhs_shape = sym.get(ops.group(1), "")
+    lhs_shape = sym.get(ops[0], "")
     lhs_dims_m = _SHAPE.findall(lhs_shape)
     if not lhs_dims_m:
         return 0.0
@@ -111,10 +125,10 @@ def _conv_flops(line: str, sym: Dict[str, str]) -> float:
     if not m:
         return 0.0
     out_elems = sum(_shape_elems(d) for _, d in _SHAPE.findall(m.group(2)))
-    ops = re.search(r"convolution\(%?([\w\.\-]+),\s*%?([\w\.\-]+)\)", line)
-    if not ops:
+    ops = _op_operands(line, "convolution")
+    if len(ops) < 2:
         return 0.0
-    kern = sym.get(ops.group(2), "")
+    kern = sym.get(ops[1], "")
     kern_elems = sum(_shape_elems(d) for _, d in _SHAPE.findall(kern))
     return 2.0 * out_elems * kern_elems
 

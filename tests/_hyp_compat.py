@@ -1,0 +1,56 @@
+"""Hypothesis compatibility shim for bare environments.
+
+The property tests use ``hypothesis`` when it is installed. On containers
+without it (the default CI image bakes only the jax toolchain) we fall back
+to a tiny deterministic sampler: ``@given(st.integers(lo, hi), ...)`` runs
+the test body on a fixed number of seeded draws from the same ranges. This
+keeps every property test collected and exercising real (if fewer) examples
+instead of import-erroring the whole module.
+
+Usage in test files::
+
+    from _hyp_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 10
+    _FALLBACK_SEED = 0xA07A  # "AOTA"
+
+    class _IntSpec:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng) -> int:
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class st:  # noqa: N801 - mimics `strategies as st`
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntSpec:
+            return _IntSpec(min_value, max_value)
+
+    def settings(**_kwargs):
+        """No-op: the fallback ignores max_examples/deadline tuning."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*specs):
+        def deco(fn):
+            def wrapper():
+                rng = _np.random.default_rng(_FALLBACK_SEED)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    fn(*(s.draw(rng) for s in specs))
+
+            # plain zero-arg callable: pytest must NOT see the wrapped
+            # signature, or it would treat the property args as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

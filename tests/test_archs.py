@@ -15,6 +15,8 @@ from repro.launch.shapes import SHAPES, make_batch
 from repro.models import (decode_step, forward, init_decode_state, init_model,
                           loss_fn, param_count)
 
+pytestmark = pytest.mark.slow  # arch-zoo/serving/integration tier (scripts/ci.sh)
+
 ALL = list(ARCH_IDS)
 
 

@@ -3,7 +3,7 @@ Dinkelbach+MILP vs our exact water-filling vs PGD vs exhaustive), eq. 25
 properties, and hypothesis property tests on random P2 instances."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.boxqp import solve_waterfill
 from repro.core.dinkelbach import dinkelbach, solve_p2

@@ -6,10 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs import get_reduced
 from repro.models import forward, init_model
+
+pytestmark = pytest.mark.slow  # arch-zoo/serving/integration tier (scripts/ci.sh)
 
 
 @pytest.mark.parametrize("arch", ["smollm-135m", "mamba2-370m", "zamba2-7b",

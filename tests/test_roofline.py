@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.roofline.analysis import HW, model_flops, roofline_terms
+from repro.roofline.analysis import (HW, cost_analysis_dict, model_flops,
+                                     roofline_terms)
 from repro.roofline.hlo_parse import analyze, split_computations
 
 
@@ -20,8 +21,8 @@ def _scan_matmul(n, size=128):
 
 def test_xla_cost_analysis_undercounts_scans():
     """The documented XLA limitation: while bodies counted once."""
-    c1 = _scan_matmul(1).cost_analysis()
-    c10 = _scan_matmul(10).cost_analysis()
+    c1 = cost_analysis_dict(_scan_matmul(1))
+    c10 = cost_analysis_dict(_scan_matmul(10))
     # 10x the work, ~1x the reported flops (up to loop-counter adds)
     assert c10["flops"] < c1["flops"] * 1.01
 

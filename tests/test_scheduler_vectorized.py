@@ -1,0 +1,87 @@
+"""Vectorized-scheduler invariants + draw-for-draw parity with the scalar
+reference implementation."""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import (ScalarSemiAsyncScheduler, SchedulerConfig,
+                                  SemiAsyncScheduler)
+
+
+def _cfg(**kw):
+    base = dict(n_clients=50, delta_t=8.0, seed=11)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def test_vector_matches_scalar_draw_for_draw():
+    """Same seed -> identical uploader sets, staleness arrays, clocks and
+    sync-round draws, round after round."""
+    vec, ref = SemiAsyncScheduler(_cfg()), ScalarSemiAsyncScheduler(_cfg())
+    vec.start_round(range(50))
+    ref.start_round(range(50))
+    for _ in range(12):
+        uv, sv = vec.advance_to_aggregation()
+        ur, sr = ref.advance_to_aggregation()
+        np.testing.assert_array_equal(uv, ur)
+        np.testing.assert_array_equal(sv, sr)
+        assert vec.time == pytest.approx(ref.time)
+        vec.start_round(uv)
+        ref.start_round(ur)
+    assert vec.sync_round_time(20) == pytest.approx(ref.sync_round_time(20))
+
+
+def test_staleness_nonnegative_and_bounded():
+    s = SemiAsyncScheduler(_cfg(n_clients=200, seed=3))
+    s.start_round(range(200))
+    for _ in range(20):
+        upl, stal = s.advance_to_aggregation()
+        assert (stal >= 0).all()
+        # U(5,15) with delta_t=8 -> at most ~2 missed periods
+        assert stal.max() <= 3
+        s.start_round(upl)
+
+
+def test_uploaders_subset_of_ready():
+    s = SemiAsyncScheduler(_cfg(n_clients=100, seed=7))
+    s.start_round(range(100))
+    for _ in range(10):
+        upl, _ = s.advance_to_aggregation()
+        assert s.ready[upl].all()                  # uploaders have b_k = 1
+        busy = np.setdiff1d(np.arange(100), upl)
+        assert not s.ready[busy].any()             # everyone else is busy
+        s.start_round(upl)
+
+
+def test_time_strictly_increases_by_delta_t():
+    s = SemiAsyncScheduler(_cfg(delta_t=5.5))
+    s.start_round(range(50))
+    prev = s.time
+    for _ in range(8):
+        s.start_round(s.advance_to_aggregation()[0])
+        assert s.time == pytest.approx(prev + 5.5)
+        prev = s.time
+
+
+def test_empty_broadcast_consumes_no_draws():
+    a, b = SemiAsyncScheduler(_cfg()), SemiAsyncScheduler(_cfg())
+    a.start_round([])
+    assert a._draw_latency() == b._draw_latency()  # streams still aligned
+
+
+def test_busy_client_keeps_model_round():
+    """A straggler restarted at round r keeps model_round=r until its next
+    broadcast, so its staleness grows by 1 per missed period."""
+    s = SemiAsyncScheduler(_cfg(n_clients=30, seed=5,
+                                lat_lo=9.0, lat_hi=15.9))
+    s.start_round(range(30))
+    seen_growth = False
+    prev_stal = None
+    for _ in range(6):
+        upl, stal = s.advance_to_aggregation()
+        if prev_stal is not None:
+            still_busy = np.setdiff1d(np.arange(30), upl)
+            if len(still_busy):
+                seen_growth = True
+        prev_stal = stal
+        s.start_round(upl)
+    assert seen_growth

@@ -12,6 +12,8 @@ from repro.configs import get_reduced
 from repro.models import decode_step, forward, init_model
 from repro.models.transformer import cache_from_prefill
 
+pytestmark = pytest.mark.slow  # arch-zoo/serving/integration tier (scripts/ci.sh)
+
 
 @pytest.mark.parametrize("arch", ["smollm-135m", "olmo-1b", "mamba2-370m",
                                   "zamba2-7b", "mixtral-8x22b"])

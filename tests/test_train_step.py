@@ -15,6 +15,8 @@ from repro.launch.steps import make_paota_train_step
 from repro.models import init_model
 from repro.models.transformer import loss_fn
 
+pytestmark = pytest.mark.slow  # arch-zoo/serving/integration tier (scripts/ci.sh)
+
 
 def _mesh11():
     return jax.make_mesh((1, 1), ("data", "model"))
