@@ -18,8 +18,8 @@ from repro.core import BoundConstants, ChannelConfig, SchedulerConfig, contracti
 from repro.data.partition import partition_noniid
 from repro.data.pipeline import build_federation
 from repro.data.synthetic import get_dataset
-from repro.fl import (COTAFServer, FLClient, LocalSGDServer, PAOTAConfig,
-                      PAOTAServer, SyncConfig, evaluate)
+from repro.fl import (COTAFServer, FLClient, FusedPAOTA, LocalSGDServer,
+                      PAOTAConfig, PAOTAServer, SyncConfig, evaluate)
 from repro.models.mlp import init_mlp_params, mlp_apply, mlp_loss
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
@@ -38,7 +38,10 @@ class BenchSetting:
     eval_every: int = 2
     seed: int = 0
     solver: str = "waterfill"
-    engine: str = "batched"      # local-training engine: batched|legacy
+    engine: str = "batched"      # batched|legacy local-training engine, or
+                                 # "fused": PAOTA runs as the on-device
+                                 # lax.scan round (counter RNG; baselines
+                                 # fall back to the batched engine)
 
     @classmethod
     def from_env(cls, **kw):
@@ -73,18 +76,27 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
     chan = ChannelConfig(n0_dbm_hz=s.n0_dbm_hz)
     sched = SchedulerConfig(n_clients=s.n_clients, delta_t=s.delta_t,
                             seed=s.seed + seed_offset)
+    # "fused" is a PAOTA-only mode; the sync baselines use the batched
+    # engine under it so the comparison stays apples-to-apples
+    engine = "batched" if s.engine == "fused" else s.engine
     if name == "paota":
-        srv = PAOTAServer(params, clients, chan, sched,
-                          PAOTAConfig(solver=s.solver, seed=s.seed,
-                                      engine=s.engine))
+        if s.engine == "fused":
+            # solver is passed through: FusedPAOTA raises on solvers it
+            # cannot run on-device rather than silently substituting
+            srv = FusedPAOTA(params, clients, chan, sched,
+                             PAOTAConfig(solver=s.solver, seed=s.seed))
+        else:
+            srv = PAOTAServer(params, clients, chan, sched,
+                              PAOTAConfig(solver=s.solver, seed=s.seed,
+                                          engine=engine))
     elif name == "local_sgd":
         srv = LocalSGDServer(params, clients, sched,
                              SyncConfig(n_select=s.n_select, seed=s.seed,
-                                        engine=s.engine))
+                                        engine=engine))
     elif name == "cotaf":
         srv = COTAFServer(params, clients, sched,
                           SyncConfig(n_select=s.n_select, seed=s.seed,
-                                     engine=s.engine), chan)
+                                     engine=engine), chan)
     else:
         raise ValueError(name)
 

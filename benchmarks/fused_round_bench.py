@@ -1,0 +1,104 @@
+"""Fused on-device PAOTA round vs the PR-1 host loop.
+
+The host path (``PAOTAServer.round``) makes ~8 host<->device round-trips
+through numpy per aggregation period; the fused path
+(``repro.fl.fused.FusedPAOTA``) runs the whole round — scheduler, eq.-25
+factors, water-filling P2, channel, power cap (7), AirComp, broadcast +
+local train — inside one jitted ``lax.scan`` over R rounds.
+
+Per K in {100, 1000}:
+
+* ``fused_round/host_k{K}``    — host-loop seconds/round (batched engine,
+  steady-state after a warmup round).
+* ``fused_round/fused_k{K}``   — fused seconds/round from ONE R-round scan
+  (steady-state: second ``advance`` call, compile reported as setup_s).
+* ``fused_round/speedup_k{K}`` — host / fused.
+
+Both paths run the counter RNG + waterfill_jnp configuration so they
+execute the same math (allclose trajectories — tests/test_fused_round.py);
+the comparison is purely host orchestration vs on-device scan.
+
+``python -m benchmarks.fused_round_bench smoke`` runs a tiny K=8, R=5 scan
+(the CI fast-tier guard that keeps the fused path compiling).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.fl_engine_bench import _make_clients
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.fl import FusedPAOTA, PAOTAConfig, PAOTAServer
+from repro.models.mlp import init_mlp_params
+
+_ROUNDS = {8: 5, 100: 20, 1000: 10}
+
+
+def _host_cfgs(k: int, seed: int = 0):
+    return (SchedulerConfig(n_clients=k, seed=seed, rng="counter"),
+            PAOTAConfig(rng="counter", solver="waterfill_jnp", seed=seed))
+
+
+def _time_host(k: int, rounds: int, seed: int = 0):
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    sched, cfg = _host_cfgs(k, seed)
+    t0 = time.perf_counter()
+    srv = PAOTAServer(params, _make_clients(k, seed), ChannelConfig(),
+                      sched, cfg)
+    srv.round()                       # warmup: hits every compile path
+    setup = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        srv.round()
+    return (time.perf_counter() - t0) / rounds, setup
+
+
+def _time_fused(k: int, rounds: int, seed: int = 0):
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    srv = FusedPAOTA(params, _make_clients(k, seed), ChannelConfig(),
+                     SchedulerConfig(n_clients=k, seed=seed),
+                     PAOTAConfig(seed=seed))
+    srv.advance(rounds)               # init + scan compile + first run
+    setup = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    srv.advance(rounds)               # steady-state: one scan device call
+    sec = (time.perf_counter() - t0) / rounds
+    assert np.isfinite(srv.global_vec).all()
+    return sec, setup
+
+
+def run(ks=(100, 1000)):
+    rows = []
+    for k in ks:
+        rounds = _ROUNDS.get(k, 10)
+        host_s, host_setup = _time_host(k, rounds)
+        rows.append({"name": f"fused_round/host_k{k}",
+                     "us_per_call": round(host_s * 1e6, 1),
+                     "derived": f"rounds_per_sec={1.0 / host_s:.3f};"
+                                f"setup_s={host_setup:.2f}"})
+        fused_s, fused_setup = _time_fused(k, rounds)
+        rows.append({"name": f"fused_round/fused_k{k}",
+                     "us_per_call": round(fused_s * 1e6, 1),
+                     "derived": f"rounds_per_sec={1.0 / fused_s:.3f};"
+                                f"scan_rounds={rounds};"
+                                f"setup_s={fused_setup:.2f}"})
+        rows.append({"name": f"fused_round/speedup_k{k}",
+                     "us_per_call": 0,
+                     "derived": f"{host_s / fused_s:.2f}x"})
+    return rows
+
+
+def main():
+    smoke = "smoke" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for row in run(ks=(8,) if smoke else (100, 1000)):
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   kernels  — aggregation/cosine/SWA kernel characteristics
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
   fl_engine — legacy vs batched federation engine rounds/sec (K up to 1000)
+  fused_round — host-loop vs fused lax.scan PAOTA rounds/sec (K up to 1000)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
@@ -19,9 +20,10 @@ import sys
 import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
-           "fig3", "fig4", "table1", "ablation"]
+           "fused_round_bench", "fig3", "fig4", "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
-           "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench"}
+           "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
+           "fused_round": "fused_round_bench", "fused": "fused_round_bench"}
 
 
 def main() -> None:

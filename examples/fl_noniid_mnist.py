@@ -19,9 +19,11 @@ def main():
     ap.add_argument("--solver", default="waterfill",
                     choices=["waterfill", "pgd", "milp"])
     ap.add_argument("--engine", default="batched",
-                    choices=["batched", "legacy"],
-                    help="local-training engine (batched = one jitted "
-                         "vmap/scan call per broadcast)")
+                    choices=["batched", "legacy", "fused"],
+                    help="batched = one jitted vmap/scan call per "
+                         "broadcast; legacy = seed per-client loop; fused "
+                         "= whole PAOTA round on-device (counter RNG, "
+                         "waterfill_jnp; baselines stay batched)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 

@@ -14,6 +14,10 @@ else
     python -m pytest -q -m "not slow"
 fi
 
+# fused-round smoke (1 tiny lax.scan) — keeps the on-device PAOTA path
+# compiling; full numbers via `python -m benchmarks.run fused_round`
+python -m benchmarks.fused_round_bench smoke
+
 if [ "${CI_BENCH:-0}" = "1" ]; then
     python -m benchmarks.run fl_engine
 fi

@@ -3,13 +3,17 @@ AirComp channel (aircomp), semi-async scheduler (scheduler), power-control
 optimization (power_control + dinkelbach/milp/boxqp), the aggregation rule
 in stacked and collective forms (aggregation), and the Theorem-1 bound
 calculators (convergence)."""
-from repro.core.aircomp import (ChannelConfig, aircomp_aggregate,  # noqa: F401
-                                aggregation_weights, sample_channel_gains)
-from repro.core.aggregation import (exact_average, paota_aggregate_stacked,  # noqa: F401
-                                    paota_allreduce, ravel)
+from repro.core.aircomp import (VARSIGMA_MIN, ChannelConfig,  # noqa: F401
+                                aircomp_aggregate, aggregation_weights,
+                                sample_channel_gains)
+from repro.core.aggregation import (exact_average, guarded_global_update,  # noqa: F401
+                                    paota_aggregate_stacked, paota_allreduce,
+                                    ravel)
 from repro.core.convergence import BoundConstants, contraction_A, gap_G  # noqa: F401
 from repro.core.dinkelbach import solve_p2  # noqa: F401
 from repro.core.power_control import (P2Problem, build_p2, cosine_similarity,  # noqa: F401
-                                      power_from_beta, similarity_factor,
-                                      staleness_factor)
-from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler  # noqa: F401
+                                      p2_constants, power_from_beta,
+                                      similarity_factor, staleness_factor)
+from repro.core.scheduler import (SchedulerConfig, SemiAsyncScheduler,  # noqa: F401
+                                  counter_latencies, round_tag_key,
+                                  sched_advance, sched_broadcast)

@@ -18,11 +18,31 @@ import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.core.aircomp import aircomp_aggregate
+from repro.core.aircomp import VARSIGMA_MIN, aircomp_aggregate
 
 
 def ravel(params) -> Tuple[jnp.ndarray, callable]:
     return ravel_pytree(params)
+
+
+def guarded_global_update(global_vec, prev_global, agg, varsigma, *,
+                          delta: bool = False,
+                          threshold: float = VARSIGMA_MIN):
+    """Apply the round update with the zero-uploader guard (masked select).
+
+    When the eq.-8 normalizer sum_k b_k p_k sits at/below the clamp, no
+    client transmitted this period: `agg` is pure AWGN divided by the
+    ~1e-12 clamp, and assigning it would destroy the global model. The
+    guard holds both w_g AND prev_global (the gradient-similarity
+    direction w_g^t - w_g^{t-1} must not collapse to zero from a skipped
+    period). Pure jnp select — the same code path serves the host
+    reference server and the jitted fused round.
+
+    Returns (new_global, new_prev_global)."""
+    cand = global_vec + agg if delta else agg
+    has_uploaders = varsigma > threshold
+    return (jnp.where(has_uploaders, cand, global_vec),
+            jnp.where(has_uploaders, global_vec, prev_global))
 
 
 def paota_aggregate_stacked(stacked_models: jnp.ndarray, powers: jnp.ndarray,

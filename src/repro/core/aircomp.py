@@ -22,6 +22,14 @@ import jax
 import jax.numpy as jnp
 
 
+# Smallest meaningful eq.-8 normalizer sum_k b_k p_k. Used both as the
+# division clamp and as the zero-uploader threshold: at or below it nothing
+# superposed this period, so the received y is pure AWGN and normalizing it
+# would overwrite w_g with ~1/VARSIGMA_MIN-amplified noise — the round must
+# hold the global instead (repro.core.aggregation.guarded_global_update).
+VARSIGMA_MIN = 1e-12
+
+
 def dbm_per_hz_to_watts(n0_dbm_hz: float) -> float:
     """-174 dBm/Hz -> Watts/Hz."""
     return 10.0 ** ((n0_dbm_hz - 30.0) / 10.0)
@@ -66,7 +74,7 @@ def aircomp_aggregate(stacked: jnp.ndarray, powers: jnp.ndarray,
     Returns (aggregate, normalizer) where normalizer = sum_k b_k p_k.
     """
     bp = powers * mask
-    varsigma = jnp.maximum(jnp.sum(bp), 1e-12)
+    varsigma = jnp.maximum(jnp.sum(bp), VARSIGMA_MIN)
     noise = sigma_n * jax.random.normal(key, stacked.shape[1:], stacked.dtype)
     if use_kernel:
         from repro.kernels.ops import aircomp_sum
@@ -80,10 +88,10 @@ def aircomp_aggregate(stacked: jnp.ndarray, powers: jnp.ndarray,
 def aggregation_weights(powers, mask):
     """alpha_k = b_k p_k / sum_i b_i p_i (eq. 8)."""
     bp = powers * mask
-    return bp / jnp.maximum(jnp.sum(bp), 1e-12)
+    return bp / jnp.maximum(jnp.sum(bp), VARSIGMA_MIN)
 
 
 def equivalent_noise_var(sigma_n2: float, powers, mask, d: int):
     """E||n~||^2 = d sigma_n^2 / (sum b_k p_k)^2 — term (e) numerator basis."""
-    s = jnp.maximum(jnp.sum(powers * mask), 1e-12)
+    s = jnp.maximum(jnp.sum(powers * mask), VARSIGMA_MIN)
     return d * sigma_n2 / (s * s)

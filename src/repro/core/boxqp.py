@@ -16,9 +16,18 @@ coordinates. So the minimizer has the water-filling form
 and a 1-D search over tau finds the global optimum. This replaces the
 Dinkelbach + MIP machinery with an O(K log(1/eps)) exact solve; the tests
 validate it against Dinkelbach(MILP) and exhaustive enumeration.
+
+``waterfill_beta_jnp`` is the same algorithm as a pure, jit-traceable jnp
+function (fixed grid scan + fixed-iteration golden-section refine, no data-
+dependent control flow) — the P2 step of the fused on-device PAOTA round
+(``repro.fl.fused``). ``solve_waterfill_jnp`` wraps it in the SolveResult
+interface so the host-path server can run the bit-identical solver
+(``PAOTAConfig.solver = "waterfill_jnp"``) for fused-vs-host equivalence.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dinkelbach import SolveResult
@@ -78,3 +87,80 @@ def solve_waterfill(prob: P2Problem, grid: int = 4096,
     return SolveResult(beta=beta, objective=obj,
                        lam=1.0 / max(obj, 1e-30), iterations=1,
                        inner="waterfill")
+
+
+# ---------------------------------------------------------------------------
+# jit-traceable form (fused on-device round)
+# ---------------------------------------------------------------------------
+
+def waterfill_beta_jnp(rho, theta, p_max, b, c1: float, c0: float,
+                       grid: int = 4096, refine: int = 60):
+    """Pure-jnp water-filling solve of P2: returns (beta, objective).
+
+    Same math as ``solve_waterfill`` with static shapes only: a `grid`-point
+    scan over tau followed by `refine` golden-section steps via fori_loop.
+    With no active client (b all zero) every candidate t is 0 and the
+    returned beta is arbitrary — the caller's zero-uploader guard makes the
+    round a no-op before beta can matter."""
+    rho = jnp.asarray(rho)
+    theta = jnp.asarray(theta)
+    p_max = jnp.asarray(p_max)
+    b = jnp.asarray(b)
+    p0 = jnp.clip(p_max * theta, 0.0, p_max)      # beta=0 endpoint
+    p1 = jnp.clip(p_max * rho, 0.0, p_max)        # beta=1 endpoint
+    lo = jnp.minimum(p0, p1) * b
+    hi = jnp.maximum(p0, p1) * b
+    active = b > 0
+    any_active = jnp.any(active)
+    tau_lo = jnp.where(any_active,
+                       jnp.min(jnp.where(active, lo, jnp.inf)), 0.0)
+    tau_hi = jnp.where(any_active,
+                       jnp.max(jnp.where(active, hi, -jnp.inf)), 1.0)
+
+    def ratio(t):
+        s = jnp.sum(t)
+        return (c1 * jnp.sum(t * t) + c0) / jnp.maximum(s * s, 1e-30)
+
+    taus = tau_lo + (tau_hi - tau_lo) * jnp.linspace(0.0, 1.0, grid)
+    ts = jnp.clip(taus[:, None], lo[None, :], hi[None, :]) * b[None, :]
+    s = jnp.sum(ts, axis=1)
+    vals = (c1 * jnp.sum(ts * ts, axis=1) + c0) / jnp.maximum(s * s, 1e-30)
+    j = jnp.argmin(vals)
+    bracket = (taus[jnp.maximum(j - 1, 0)], taus[jnp.minimum(j + 1, grid - 1)])
+
+    gr = (np.sqrt(5.0) - 1.0) / 2.0
+
+    def refine_step(_, ab):
+        a, bnd = ab
+        m1 = bnd - gr * (bnd - a)
+        m2 = a + gr * (bnd - a)
+        f1 = ratio(jnp.clip(m1, lo, hi) * b)
+        f2 = ratio(jnp.clip(m2, lo, hi) * b)
+        return jnp.where(f1 < f2, a, m1), jnp.where(f1 < f2, m2, bnd)
+
+    a, bnd = jax.lax.fori_loop(0, refine, refine_step, bracket)
+    tau = (a + bnd) / 2.0
+    t = jnp.clip(tau, lo, hi) * b
+    # recover beta from t = pm (theta + (rho - theta) beta)
+    dcoef = p_max * (rho - theta)
+    interior = jnp.abs(dcoef) > 1e-12
+    beta = jnp.where(interior,
+                     (t - p_max * theta) / jnp.where(interior, dcoef, 1.0),
+                     0.5)
+    beta = jnp.clip(beta, 0.0, 1.0)
+    p = jnp.clip(p_max * (beta * rho + (1.0 - beta) * theta), 0.0, p_max) * b
+    return beta, ratio(p)
+
+
+def solve_waterfill_jnp(prob: P2Problem) -> SolveResult:
+    """SolveResult wrapper over ``waterfill_beta_jnp`` — the host-path entry
+    (solver="waterfill_jnp") running the exact solver code the fused round
+    jits, so host and fused trajectories agree to float32 reduction order."""
+    beta, obj = waterfill_beta_jnp(
+        jnp.asarray(prob.rho, jnp.float32), jnp.asarray(prob.theta, jnp.float32),
+        jnp.asarray(prob.p_max, jnp.float32), jnp.asarray(prob.b, jnp.float32),
+        float(prob.c1), float(prob.c0))
+    obj = float(obj)
+    return SolveResult(beta=np.asarray(beta, float), objective=obj,
+                       lam=1.0 / max(obj, 1e-30), iterations=1,
+                       inner="waterfill_jnp")

@@ -131,8 +131,13 @@ def dinkelbach(prob: P2Problem, inner: str = "pgd", tol: float = 1e-8,
 
 
 def solve_p2(prob: P2Problem, method: str = "pgd", **kw) -> SolveResult:
-    """Entry point. method in {milp, pgd, exhaustive, waterfill}."""
+    """Entry point. method in {milp, pgd, exhaustive, waterfill,
+    waterfill_jnp} — the latter runs the jit-traceable float32 solver the
+    fused on-device round uses (repro.core.boxqp.waterfill_beta_jnp)."""
     if method == "waterfill":
         from repro.core.boxqp import solve_waterfill
         return solve_waterfill(prob)
+    if method == "waterfill_jnp":
+        from repro.core.boxqp import solve_waterfill_jnp
+        return solve_waterfill_jnp(prob)
     return dinkelbach(prob, inner=method, **kw)

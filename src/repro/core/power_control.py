@@ -109,14 +109,21 @@ class P2Problem:
         return (G, g, g0), (Q, q, q0)
 
 
+def p2_constants(smooth_l: float, eps_bound: float, k: int, model_dim: int,
+                 sigma_n2: float):
+    """Theorem-1 constants of P2: c1 = L eps^2 K (term-d scale) and
+    c0 = 2 L d sigma_n^2 (term-e numerator). Shared by the numpy problem
+    builder and the fused on-device solver."""
+    return smooth_l * eps_bound ** 2 * k, 2.0 * smooth_l * model_dim * sigma_n2
+
+
 def build_p2(rho, theta, p_max, b, *, smooth_l: float, eps_bound: float,
              model_dim: int, sigma_n2: float) -> P2Problem:
     """Assemble P2 from Theorem-1 constants: c1 = L eps^2 K, c0 = 2 L d sigma^2."""
     rho = np.asarray(rho, float)
-    k = len(rho)
+    c1, c0 = p2_constants(smooth_l, eps_bound, len(rho), model_dim, sigma_n2)
     return P2Problem(
         rho=rho, theta=np.asarray(theta, float),
         p_max=np.asarray(p_max, float), b=np.asarray(b, float),
-        c1=smooth_l * eps_bound ** 2 * k,
-        c0=2.0 * smooth_l * model_dim * sigma_n2,
+        c1=c1, c0=c0,
     )

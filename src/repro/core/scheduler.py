@@ -18,13 +18,78 @@ a handful of vector ops. ``ScalarSemiAsyncScheduler`` is the seed's
 per-client-loop implementation, kept as the reference: both consume the
 PCG64 stream identically (one uniform per broadcast client, in id order),
 so they match draw-for-draw (tests/test_scheduler_vectorized.py).
+
+Counter-based RNG (``SchedulerConfig.rng = "counter"``): latency draws come
+from ``jax.random`` keyed purely on (seed, broadcast round) instead of a
+sequential PCG64 stream. Each round's draws are then independent of how
+many clients any earlier round broadcast — exactly the property the fused
+on-device round (``repro.fl.fused``) needs so that a ``lax.scan`` step can
+reproduce them without host state. The same fold-in scheme (one tag per
+consumer) also keys the server's channel/noise/minibatch draws.
+
+The module additionally provides the scheduler state-transition as pure
+``jnp`` functions (``sched_advance`` / ``sched_broadcast``) over array
+state (``ready``, ``busy_until``, ``model_round``) — the jit-traceable
+form the fused round scans over.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+# one tag per independent per-round RNG consumer (counter-based streams):
+# key_{r,tag} = fold_in(fold_in(base_key, r), tag)
+TAG_LATENCY, TAG_CHANNEL, TAG_NOISE, TAG_BATCH = 0, 1, 2, 3
+
+
+def round_tag_key(base_key, round_idx, tag: int):
+    """Counter-based per-round key: fold the round index, then the consumer
+    tag. ``round_idx`` may be a traced int (used inside ``lax.scan``)."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, round_idx), tag)
+
+
+def counter_latencies(base_key, round_idx, k: int, lo: float, hi: float):
+    """All K latency draws for the broadcast of global round ``round_idx``
+    — U(lo, hi), keyed on (base seed, round) only. Broadcast clients index
+    into this vector; non-broadcast entries are simply unused, so the host
+    reference and the fused path consume identical values per client."""
+    key = round_tag_key(base_key, round_idx, TAG_LATENCY)
+    return jax.random.uniform(key, (k,), minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp scheduler state transition (fused-round building blocks)
+# ---------------------------------------------------------------------------
+
+def sched_advance(ready, busy_until, model_round, time, round_idx):
+    """jnp form of ``advance_to_aggregation``: at aggregation-slot ``time``
+    flip ready bits for clients whose training finished, and compute the
+    per-client staleness s_k = round - model_round (0 for busy clients).
+
+    ``time`` is the already-advanced slot clock — callers compute it as
+    (round+1) * delta_t rather than accumulating +=, so a float32 clock
+    cannot drift from a float64 one over long scans. Returns
+    (ready, staleness); the round counter itself is advanced by the caller
+    (it lives in the scan carry)."""
+    ready = ready | (busy_until <= time)
+    stal = jnp.where(ready, round_idx - model_round, 0)
+    return ready, stal
+
+
+def sched_broadcast(ready, busy_until, model_round, upl_mask, time, lat,
+                    new_round):
+    """jnp form of ``start_round``: clients under ``upl_mask`` receive the
+    new global model, go busy for their latency draw, and record the round
+    they now train on. Masked no-op for everyone else (and a full no-op
+    when the mask is empty — the zero-uploader round)."""
+    ready = jnp.where(upl_mask, False, ready)
+    busy_until = jnp.where(upl_mask, time + lat, busy_until)
+    model_round = jnp.where(upl_mask, new_round, model_round)
+    return ready, busy_until, model_round
 
 
 @dataclass
@@ -42,6 +107,9 @@ class SchedulerConfig:
     lat_lo: float = 5.0
     lat_hi: float = 15.0
     seed: int = 0
+    rng: str = "host"             # "host": sequential PCG64 stream (seed
+                                  # behaviour); "counter": per-round
+                                  # jax.random draws (fused-path reference)
 
 
 class SemiAsyncScheduler:
@@ -55,6 +123,8 @@ class SemiAsyncScheduler:
         self.ready = np.ones(cfg.n_clients, dtype=bool)
         self.busy_until = np.zeros(cfg.n_clients)
         self.model_round = np.zeros(cfg.n_clients, dtype=np.int64)
+        self._jkey = (jax.random.PRNGKey(cfg.seed)
+                      if cfg.rng == "counter" else None)
 
     def _draw_latency(self, size=None):
         return self.rng.uniform(self.cfg.lat_lo, self.cfg.lat_hi, size)
@@ -62,11 +132,18 @@ class SemiAsyncScheduler:
     def start_round(self, participant_ids):
         """Broadcast: clients in `participant_ids` receive w_g^r and begin
         local training; each gets a fresh latency draw (one per client, in
-        id order — the same stream consumption as the scalar reference)."""
+        id order — the same stream consumption as the scalar reference).
+        Counter mode draws all K latencies keyed on the broadcast round and
+        indexes the participants, matching the fused path draw-for-draw."""
         ids = np.asarray(participant_ids, dtype=np.int64)
         if ids.size == 0:
             return
-        lat = self._draw_latency(ids.size)
+        if self.cfg.rng == "counter":
+            lat = np.asarray(counter_latencies(
+                self._jkey, self.round, self.cfg.n_clients,
+                self.cfg.lat_lo, self.cfg.lat_hi))[ids]
+        else:
+            lat = self._draw_latency(ids.size)
         self.ready[ids] = False
         self.model_round[ids] = self.round
         self.busy_until[ids] = self.time + lat

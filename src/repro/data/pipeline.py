@@ -10,12 +10,23 @@ Two consumers share ONE index-selection code path (``ClientData
   stacks the per-round index plans into a ``(K, M, B)`` tensor and
   gathers on device from the padded federation built by
   ``stack_federation``.
+
+``counter_batch_plan`` is the third, stateless planner: a pure-jnp
+``(K, M, B)`` plan keyed on (key, client id) with i.i.d. uniform index
+draws. It has no epoch cursor — the plan for round r is a function of the
+round key alone — which is what lets the fused on-device round
+(``repro.fl.fused``) build its minibatches inside a ``lax.scan`` step with
+zero host involvement. It samples WITH replacement (unlike the
+epoch-shuffled host cursors), a documented statistical — not numerical —
+deviation; see EXPERIMENTS.md §Fused PAOTA round.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -66,6 +77,26 @@ class ClientData:
 
 def build_federation(x, y, parts, seed: int = 0):
     return [ClientData(x[p], y[p], k, seed) for k, p in enumerate(parts)]
+
+
+def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int):
+    """Stateless minibatch plan for a whole federation: (K, M, B) int32
+    indices, client k drawing i.i.d. uniform from range(n_samples[k]).
+
+    ``key`` should already encode the round (see ``repro.core.scheduler
+    .round_tag_key``); each client folds in its id, so plans are
+    independent across clients and rounds. Pure and jit-traceable —
+    callable from inside a ``lax.scan`` step. Padding rows are never
+    selected because draws are bounded by the true per-client size."""
+    n_samples = jnp.asarray(n_samples, jnp.int32)
+
+    def one(cid, nk):
+        ck = jax.random.fold_in(key, cid)
+        return jax.random.randint(ck, (n_batches, batch_size), 0, nk,
+                                  dtype=jnp.int32)
+
+    k = n_samples.shape[0]
+    return jax.vmap(one)(jnp.arange(k, dtype=jnp.uint32), n_samples)
 
 
 @dataclass

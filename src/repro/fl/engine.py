@@ -18,6 +18,13 @@ seeds they train on identical sample sequences and produce global models
 equal up to float-reduction reordering (verified by
 tests/test_engine_equivalence.py with ``allclose``).
 
+``BatchedEngine.enable_counter_plan`` switches to the third planning mode:
+stateless counter-based ``jax.random`` plans (``repro.data.pipeline
+.counter_batch_plan``) keyed on the broadcast round. This is the mode the
+fused on-device round scans with — and the mode the host-path server runs
+in when it serves as the fused path's reference (PAOTAConfig.rng
+= "counter").
+
 Masking semantics for a partial broadcast (only ``ids`` restart): the
 batched call still executes the fused K-client computation — clients
 outside ``ids`` get an all-zeros index plan and their (discarded) output
@@ -34,7 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
-from repro.data.pipeline import ClientData, stack_federation
+from repro.core.scheduler import TAG_BATCH, round_tag_key
+from repro.data.pipeline import ClientData, counter_batch_plan, stack_federation
 from repro.fl.client import FLClient
 
 
@@ -48,15 +56,23 @@ class LegacyEngine:
         self.n_clients = len(clients)
         self.n_samples = np.array([c.n_samples for c in clients], np.int64)
 
-    def local_train(self, params, ids: Sequence[int]) -> np.ndarray:
+    def local_train(self, params, ids: Sequence[int],
+                    round_idx=None) -> np.ndarray:
         """Train clients `ids` from `params`; returns (len(ids), d) raveled
-        trained models, rows ordered as `ids`."""
+        trained models, rows ordered as `ids`. An empty broadcast returns
+        shape (0, d) — the model dimension is preserved so callers can
+        concatenate without special-casing. ``round_idx`` is accepted for
+        interface parity with the batched engine and ignored (the legacy
+        loop only supports the stateful host-cursor plans)."""
         out = []
         for k in ids:
             trained = self.clients[int(k)].local_train(params)
             tv, _ = ravel_pytree(trained)
             out.append(np.asarray(tv))
-        return np.stack(out) if out else np.zeros((0, 0))
+        if not out:
+            d = int(ravel_pytree(params)[0].size)
+            return np.zeros((0, d))
+        return np.stack(out)
 
 
 class BatchedEngine:
@@ -82,9 +98,15 @@ class BatchedEngine:
                 f"clients")
         self._x = jnp.asarray(stacked.x)
         self._y = jnp.asarray(stacked.y)
+        self._n_dev = jnp.asarray(self.n_samples, jnp.int32)
         self._idx = np.zeros((self.n_clients, local_steps, batch_size),
                              np.int32)
         self._train = jax.jit(self._train_all)
+        # stateless counter-based planning (enable_counter_plan): index
+        # plans become a pure function of (plan key, round) — required by
+        # the fused round and by the host reference compared against it
+        self.plan = "host"
+        self._plan_key = None
 
     @classmethod
     def from_clients(cls, clients: List[FLClient]) -> "BatchedEngine":
@@ -117,13 +139,37 @@ class BatchedEngine:
 
         return jax.vmap(one_client)(x, y, idx)
 
-    def local_train(self, params, ids: Sequence[int]) -> np.ndarray:
+    def enable_counter_plan(self, key) -> None:
+        """Switch minibatch planning to the stateless counter scheme: the
+        (K, M, B) plan for broadcast round r is ``counter_batch_plan``
+        keyed on round_tag_key(key, r, TAG_BATCH). Epoch cursors in
+        ``self.fed`` are no longer consumed."""
+        self.plan = "counter"
+        self._plan_key = key
+
+    def round_plan(self, round_idx):
+        """Counter-mode (K, M, B) index plan for broadcast round
+        ``round_idx`` (host path and fused path call the same function)."""
+        key = round_tag_key(self._plan_key, round_idx, TAG_BATCH)
+        return counter_batch_plan(key, self._n_dev, self.local_steps,
+                                  self.batch_size)
+
+    def local_train(self, params, ids: Sequence[int],
+                    round_idx=None) -> np.ndarray:
         ids = np.asarray(ids, np.int64)
-        self._idx[:] = 0
-        for k in ids:
-            self._idx[k] = np.stack(list(
-                self.fed[k].batch_indices(self.batch_size, self.local_steps)))
-        flat = self._train(params, self._x, self._y, jnp.asarray(self._idx))
+        if self.plan == "counter":
+            if round_idx is None:
+                raise ValueError("counter-plan engine needs the broadcast "
+                                 "round index")
+            idx = self.round_plan(int(round_idx))
+        else:
+            self._idx[:] = 0
+            for k in ids:
+                self._idx[k] = np.stack(list(
+                    self.fed[k].batch_indices(self.batch_size,
+                                              self.local_steps)))
+            idx = jnp.asarray(self._idx)
+        flat = self._train(params, self._x, self._y, idx)
         # subset on device: only the requested rows cross to host
         return np.asarray(flat[jnp.asarray(ids)])
 

@@ -11,6 +11,18 @@ Per aggregation period (every delta_t seconds of simulated time):
   4. AirComp-aggregate the stacked local models with AWGN (eqs. 6+8);
   5. broadcast w_g^{r+1} to the uploaders, who restart local training.
 
+A period in which NO client finished (b_k = 0 for all k) is a no-op: the
+global model and its previous-direction are held unchanged and the history
+records varsigma = 0.0 — aggregating would divide pure channel noise by the
+~0 normalizer (see repro.core.aggregation.guarded_global_update).
+
+This class is the host reference: one device round-trip per stage. The
+fully fused, single-device-call form of the same round lives in
+``repro.fl.fused.FusedPAOTA``; with ``PAOTAConfig(rng="counter",
+solver="waterfill_jnp")`` and ``SchedulerConfig(rng="counter")`` this
+server consumes the exact RNG streams the fused scan does and serves as
+its allclose reference (tests/test_fused_round.py).
+
 Local training is delegated to a federation engine (repro.fl.engine):
 the default ``BatchedEngine`` runs all broadcast clients in one jitted
 vmap/scan call; ``engine="legacy"`` restores the seed's per-client loop
@@ -26,20 +38,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aircomp import (ChannelConfig, effective_power_cap,
-                                sample_channel_gains)
-from repro.core.aggregation import paota_aggregate_stacked, ravel
+from repro.core.aircomp import (VARSIGMA_MIN, ChannelConfig,
+                                effective_power_cap, sample_channel_gains)
+from repro.core.aggregation import (guarded_global_update,
+                                    paota_aggregate_stacked, ravel)
 from repro.core.dinkelbach import solve_p2
 from repro.core.power_control import (build_p2, cosine_similarity,
                                       similarity_factor, staleness_factor)
-from repro.core.scheduler import SchedulerConfig, SemiAsyncScheduler
-from repro.fl.engine import make_engine
+from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
+                                  SemiAsyncScheduler, round_tag_key)
+from repro.fl.engine import BatchedEngine, make_engine
 
 
 @dataclass
 class PAOTAConfig:
     omega: float = 3.0            # staleness constant Omega (Sec. IV-A)
-    solver: str = "waterfill"     # p2 solver: waterfill|pgd|milp|exhaustive
+    solver: str = "waterfill"     # p2 solver: waterfill|waterfill_jnp|pgd|
+                                  # milp|exhaustive
     smooth_l: float = 10.0        # L (Sec. IV-A)
     eps_bound: float = 0.05       # epsilon (Assumption 3)
     use_kernel: bool = False      # route aggregation through Pallas kernel
@@ -50,6 +65,13 @@ class PAOTAConfig:
                                   # then caps p by the much smaller ||dw||,
                                   # restoring SNR in harsh channels — see
                                   # EXPERIMENTS.md §Repro notes + ablation)
+    rng: str = "host"             # "host": sequential key splits + stateful
+                                  # minibatch cursors (seed behaviour);
+                                  # "counter": per-round fold_in keys +
+                                  # counter minibatch plans — the reference
+                                  # mode for the fused on-device round
+                                  # (repro.fl.fused); requires the batched
+                                  # engine and SchedulerConfig(rng="counter")
     seed: int = 0
 
 
@@ -59,6 +81,14 @@ class PAOTAServer:
         self.engine = make_engine(clients, cfg.engine)
         self.chan = chan
         self.cfg = cfg
+        if cfg.rng == "counter":
+            if not isinstance(self.engine, BatchedEngine):
+                raise ValueError("rng='counter' needs the batched engine "
+                                 "(counter minibatch plans)")
+            if sched_cfg.rng != "counter":
+                raise ValueError("rng='counter' needs SchedulerConfig("
+                                 "rng='counter') so latency draws match")
+            self.engine.enable_counter_plan(jax.random.PRNGKey(cfg.seed))
         self.scheduler = SemiAsyncScheduler(sched_cfg)
         vec, self.unravel = ravel(init_params)
         self.global_vec = np.asarray(vec)
@@ -79,23 +109,52 @@ class PAOTAServer:
         One fused device call under the batched engine."""
         ids = np.asarray(ids, dtype=np.int64)
         start = self.global_vec.copy()
+        broadcast_round = self.scheduler.round   # the round `ids` train on
         self.scheduler.start_round(ids)
         if ids.size == 0:
             return
         params = self.unravel(jnp.asarray(start))
-        trained = self.engine.local_train(params, ids)
+        trained = self.engine.local_train(params, ids,
+                                          round_idx=broadcast_round)
         self._pending_models[ids] = trained
         self._pending_starts[ids] = start
 
     def global_params(self):
         return self.unravel(jnp.asarray(self.global_vec))
 
+    def _round_key(self, round_idx: int, tag: int):
+        """Per-consumer subkey: counter mode derives it from (round, tag)
+        so draws are reproducible without sequential state; host mode keeps
+        the seed's split chain."""
+        if self.cfg.rng == "counter":
+            return round_tag_key(self.key, round_idx, tag)
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
     # ------------------------------------------------------------------
     def round(self) -> dict:
         upl, stal = self.scheduler.advance_to_aggregation()
+        r = self.scheduler.round - 1          # this aggregation's index
         k_tot = self.engine.n_clients
         b = np.zeros(k_tot)
         b[upl] = 1.0
+
+        if b.sum() == 0:
+            # Zero-uploader period: every client is still mid-training
+            # (routine at small K or lat_lo >> delta_t). Nothing superposes,
+            # so the received y is pure AWGN and eq. (8)'s normalizer is 0 —
+            # running AirComp would divide noise by the 1e-12 clamp and
+            # overwrite w_g with ~1e12-amplified garbage. Hold the global
+            # (and its direction) and skip P2/channel/AirComp entirely.
+            info = {"round": r,
+                    "time": self.scheduler.time,
+                    "n_participants": 0,
+                    "mean_staleness": 0.0,
+                    "beta_mean": 0.0,
+                    "varsigma": 0.0,
+                    "p2_objective": float("inf")}
+            self.history.append(info)
+            return info
 
         stacked = self._pending_models
         deltas = stacked - self._pending_starts
@@ -123,7 +182,7 @@ class PAOTAServer:
         payload = deltas if self.cfg.transmit == "delta" else stacked
 
         # instantaneous power constraint (7) under the sampled channel
-        self.key, sub = jax.random.split(self.key)
+        sub = self._round_key(r, TAG_CHANNEL)
         h = np.asarray(sample_channel_gains(sub, k_tot, self.chan))
         w_norm2 = np.sum(payload.astype(np.float64) ** 2, axis=1)
         cap = np.asarray(effective_power_cap(jnp.asarray(w_norm2),
@@ -131,27 +190,29 @@ class PAOTAServer:
                                              self.chan.p_max_watts))
         powers = np.minimum(powers, cap)
 
-        # AirComp aggregation (eqs. 6+8)
-        self.key, sub = jax.random.split(self.key)
+        # AirComp aggregation (eqs. 6+8) with the degenerate-normalizer
+        # guard: if the capped powers somehow sum to ~0, hold the global
+        # rather than assign amplified noise (same select as the fused path)
+        sub = self._round_key(r, TAG_NOISE)
         agg, varsigma = paota_aggregate_stacked(
             jnp.asarray(payload), jnp.asarray(powers), jnp.asarray(b), sub,
             self.chan.sigma_n, use_kernel=self.cfg.use_kernel)
-        self.prev_global = self.global_vec
-        if self.cfg.transmit == "delta":
-            # w^{r+1} = w^r + sum_k alpha_k dw_k + n/varsigma
-            self.global_vec = self.global_vec + np.asarray(agg)
-        else:
-            self.global_vec = np.asarray(agg)
+        new_global, new_prev = guarded_global_update(
+            jnp.asarray(self.global_vec), jnp.asarray(self.prev_global),
+            agg, varsigma, delta=self.cfg.transmit == "delta")
+        self.prev_global = np.asarray(new_prev)
+        self.global_vec = np.asarray(new_global)
 
         # uploaders receive the new model and restart (Fig. 2 workflow)
         self._kick_off(upl)
 
-        info = {"round": self.scheduler.round - 1,
+        varsigma = float(varsigma)
+        info = {"round": r,
                 "time": self.scheduler.time,
                 "n_participants": int(b.sum()),
                 "mean_staleness": float(stal[upl].mean()) if len(upl) else 0.0,
                 "beta_mean": float(np.mean(res.beta[b > 0])) if b.sum() else 0.0,
-                "varsigma": float(varsigma),
+                "varsigma": varsigma if varsigma > VARSIGMA_MIN else 0.0,
                 "p2_objective": res.objective}
         self.history.append(info)
         return info

@@ -26,6 +26,14 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK_D = 512
 
 
+def backend_interpret_default() -> bool:
+    """Pallas lowering policy: compile for real on TPU, fall back to
+    interpret mode everywhere else (CPU/GPU containers). Passing
+    ``interpret=True`` unconditionally would mean the "fused" kernel never
+    actually compiles even on TPU."""
+    return jax.default_backend() != "tpu"
+
+
 def _kernel(bp_ref, x_ref, noise_ref, out_ref):
     bp = bp_ref[...]                       # (1, K)
     x = x_ref[...]                         # (K, BLOCK_D)
@@ -34,15 +42,22 @@ def _kernel(bp_ref, x_ref, noise_ref, out_ref):
     acc = jax.lax.dot_general(
         bp, x, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)       # (1, BLOCK_D)
-    out_ref[...] = ((acc + n.astype(jnp.float32)) / varsigma).astype(out_ref.dtype)
+    # noise joins the reduction in the accumulator dtype, not its own
+    out_ref[...] = ((acc + n.astype(acc.dtype)) / varsigma).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def aircomp_sum_pallas(stacked: jnp.ndarray, bp: jnp.ndarray,
                        noise: jnp.ndarray, *, block_d: int = DEFAULT_BLOCK_D,
-                       interpret: bool = True) -> jnp.ndarray:
-    """stacked: (K, D); bp: (K,); noise: (D,) -> (D,) aggregate."""
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """stacked: (K, D); bp: (K,); noise: (D,) -> (D,) aggregate.
+
+    ``interpret=None`` resolves from the active backend (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = backend_interpret_default()
     k, d = stacked.shape
+    noise = noise.astype(stacked.dtype)
     pad = (-d) % block_d
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))

@@ -1,9 +1,11 @@
 """jit'd public wrappers for the Pallas kernels.
 
-On this CPU container the kernels run in interpret mode (the kernel body
-executes in Python/XLA-CPU); on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower
-them for real. The wrappers also expose layout adaptation (GQA head
-repetition, (B,T,H,D) <-> (BH,T,D)) so the model code stays clean.
+Lowering policy is backend-driven: on TPU the kernels compile for real; on
+CPU/GPU containers they run in interpret mode (the kernel body executes in
+Python/XLA-CPU). ``REPRO_PALLAS_COMPILE=1`` forces compilation anywhere,
+``REPRO_PALLAS_COMPILE=0`` forces interpret even on TPU. The wrappers also
+expose layout adaptation (GQA head repetition, (B,T,H,D) <-> (BH,T,D)) so
+the model code stays clean.
 """
 from __future__ import annotations
 
@@ -12,22 +14,33 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.kernels.aircomp_sum import aircomp_sum_pallas
+from repro.kernels.aircomp_sum import (aircomp_sum_pallas,
+                                       backend_interpret_default)
 from repro.kernels.cosine_sim import cosine_partials_pallas
 from repro.kernels.swa_attention import swa_attention_pallas
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def interpret_mode() -> bool:
+    """Resolved lazily at first kernel call, NOT at import: touching
+    jax.default_backend() on import would initialize the backend before
+    the application could configure its platform."""
+    env = os.environ.get("REPRO_PALLAS_COMPILE")
+    if env == "1":
+        return False
+    if env == "0":
+        return True
+    return backend_interpret_default()
 
 
 def aircomp_sum(stacked: jnp.ndarray, bp: jnp.ndarray,
                 noise: jnp.ndarray) -> jnp.ndarray:
     """Fused (sum_k bp_k w_k + n)/sum bp_k. stacked (K,D) -> (D,)."""
-    return aircomp_sum_pallas(stacked, bp, noise, interpret=INTERPRET)
+    return aircomp_sum_pallas(stacked, bp, noise, interpret=interpret_mode())
 
 
 def cosine_sim(deltas: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-12):
     """Per-client cos(dw_k, g): (K, D), (D,) -> (K,)."""
-    parts = cosine_partials_pallas(deltas, g, interpret=INTERPRET)
+    parts = cosine_partials_pallas(deltas, g, interpret=interpret_mode())
     gn = jnp.sqrt(jnp.maximum(jnp.sum(g.astype(jnp.float32) ** 2), eps))
     return parts[:, 0] / jnp.maximum(jnp.sqrt(jnp.maximum(parts[:, 1], eps)) * gn,
                                      eps)
@@ -49,5 +62,5 @@ def swa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
     out = swa_attention_pallas(qf, kf, vf, window=window, causal=causal,
                                block_q=block_q, block_k=block_k,
-                               interpret=INTERPRET)
+                               interpret=interpret_mode())
     return out.reshape(b, h, t, d).transpose(0, 2, 1, 3)

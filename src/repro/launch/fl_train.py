@@ -8,7 +8,10 @@ Thin CLI over examples/fl_noniid_mnist.py:
 ``--engine batched`` (default) runs local training as one jitted
 vmap/scan call over the whole federation; ``--engine legacy`` restores
 the seed's per-client loop (see EXPERIMENTS.md §Batched federation
-engine).
+engine); ``--engine fused`` runs the ENTIRE PAOTA round on-device
+(repro.fl.fused.FusedPAOTA — scheduler, eq.-25 factors, water-filling P2,
+channel + power cap, AirComp, broadcast and local training as one jitted
+lax.scan step; see EXPERIMENTS.md §Fused PAOTA round).
 """
 from examples.fl_noniid_mnist import main
 

@@ -76,6 +76,42 @@ def test_make_engine_kinds(data):
         make_engine(clients, "fused")
 
 
+def test_empty_broadcast_returns_zero_by_d(data):
+    """Regression: an empty `ids` must return shape (0, d) — not (0, 0) —
+    so callers can concatenate/assign without special-casing."""
+    params = init_mlp_params(jax.random.PRNGKey(0))
+    legacy = LegacyEngine(_clients(data))
+    batched = BatchedEngine.from_clients(_clients(data))
+    d = batched.local_train(params, np.arange(K)).shape[1]
+    empty = np.array([], dtype=np.int64)
+    assert legacy.local_train(params, empty).shape == (0, d)
+    assert batched.local_train(params, empty).shape == (0, d)
+    # concatenation just works
+    out = np.concatenate([legacy.local_train(params, empty),
+                          legacy.local_train(params, np.array([1]))])
+    assert out.shape == (1, d)
+
+
+def test_counter_plan_mode_trains_and_is_stateless(data):
+    """Counter-mode plans are a pure function of (key, round): the same
+    round trains identically twice, and epoch cursors never advance."""
+    params = init_mlp_params(jax.random.PRNGKey(0))
+    eng = BatchedEngine.from_clients(_clients(data))
+    eng.enable_counter_plan(jax.random.PRNGKey(7))
+    ids = np.arange(K)
+    out1 = eng.local_train(params, ids, round_idx=3)
+    out2 = eng.local_train(params, ids, round_idx=3)
+    np.testing.assert_array_equal(out1, out2)
+    assert not np.array_equal(out1, eng.local_train(params, ids, round_idx=4))
+    assert all(c._epoch == 0 for c in eng.fed)     # cursors untouched
+    with pytest.raises(ValueError):
+        eng.local_train(params, ids)               # round index required
+    # plans never index past a client's true size (padding untouched)
+    idx = np.asarray(eng.round_plan(11))
+    assert np.all(idx >= 0)
+    assert np.all(idx.max(axis=(1, 2)) < eng.n_samples)
+
+
 def test_batched_engine_rejects_short_clients(data):
     clients = _clients(data, batch_size=512)   # > smallest client
     with pytest.raises(ValueError):

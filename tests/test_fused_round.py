@@ -1,0 +1,113 @@
+"""Fused on-device PAOTA round: a single jitted lax.scan must reproduce
+the host-path PAOTAServer (run in its counter-RNG reference mode) round
+for round, and the scan must execute 20+ rounds in one device call."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation
+from repro.data.synthetic import make_mnist_like
+from repro.fl import (FLClient, FusedPAOTA, LegacyEngine, PAOTAConfig,
+                      PAOTAServer)
+from repro.models.mlp import init_mlp_params, mlp_loss
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, _, _ = make_mnist_like(n_train=2000, n_test=10)
+    parts = partition_noniid(y, n_clients=K, seed=0)
+    return x, y, parts
+
+
+def _clients(data):
+    x, y, parts = data
+    return [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+            for d in build_federation(x, y, parts)]
+
+
+def _params():
+    return init_mlp_params(jax.random.PRNGKey(0))
+
+
+def _fused(data, **sched_kw):
+    return FusedPAOTA(_params(), _clients(data), ChannelConfig(),
+                      SchedulerConfig(n_clients=K, seed=1, **sched_kw),
+                      PAOTAConfig())
+
+
+def test_fused_matches_host_reference_over_rounds(data):
+    """Acceptance: fused scan allclose-equivalent to the host-path
+    PAOTAServer over >= 4 rounds at equal seeds (host in counter-RNG mode
+    with the same jnp water-filling solver — identical draws, identical
+    math, different orchestration)."""
+    host = PAOTAServer(_params(), _clients(data), ChannelConfig(),
+                       SchedulerConfig(n_clients=K, seed=1, rng="counter"),
+                       PAOTAConfig(rng="counter", solver="waterfill_jnp"))
+    fused = _fused(data)
+    for _ in range(5):
+        ih, if_ = host.round(), fused.round()
+        assert ih["n_participants"] == if_["n_participants"]
+        assert ih["time"] == if_["time"]
+        assert ih["varsigma"] == pytest.approx(if_["varsigma"], rel=1e-5)
+        np.testing.assert_allclose(host.global_vec, fused.global_vec,
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_fused_scan_20_rounds_single_call(data):
+    """Acceptance: one lax.scan covers >= 20 rounds with zero host
+    round-trips inside; chunking the same 20 rounds into two scans lands
+    on the same trajectory (counter RNG is position-, not call-, based)."""
+    one_shot = _fused(data)
+    rows = one_shot.advance(20)
+    assert len(rows) == 20
+    assert [r["round"] for r in rows] == list(range(20))
+    assert np.isfinite(one_shot.global_vec).all()
+    assert rows[-1]["time"] == pytest.approx(20 * 8.0)
+    assert any(r["n_participants"] > 0 for r in rows)
+    assert any(r["mean_staleness"] > 0 for r in rows)   # semi-async state
+
+    chunked = _fused(data)
+    chunked.advance(12)
+    chunked.advance(8)
+    np.testing.assert_allclose(one_shot.global_vec, chunked.global_vec,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_zero_uploader_rounds_hold_global(data):
+    """Regression (fused path): periods where no client finished must leave
+    w_g bit-identical, then training resumes once uploads arrive."""
+    fused = _fused(data, delta_t=8.0, lat_lo=30.0, lat_hi=40.0)
+    g0 = fused.global_vec.copy()
+    rows = fused.advance(3)             # t in {8,16,24} < lat_lo: nobody done
+    assert all(r["n_participants"] == 0 for r in rows)
+    assert all(r["varsigma"] == 0.0 for r in rows)
+    np.testing.assert_array_equal(fused.global_vec, g0)
+    rows = fused.advance(3)             # t up to 48 >= lat_hi: uploads land
+    assert any(r["n_participants"] > 0 for r in rows)
+    assert not np.array_equal(fused.global_vec, g0)
+
+
+def test_fused_requires_batched_engine(data):
+    with pytest.raises(ValueError):
+        FusedPAOTA(_params(), LegacyEngine(_clients(data)), ChannelConfig(),
+                   SchedulerConfig(n_clients=K, seed=1), PAOTAConfig())
+
+
+def test_host_counter_mode_guards():
+    """Counter RNG mode must be wired consistently or refused."""
+    x, y, _, _ = make_mnist_like(n_train=600, n_test=10)
+    parts = partition_noniid(y, n_clients=3, seed=0)
+    clients = [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=2)
+               for d in build_federation(x, y, parts)]
+    with pytest.raises(ValueError):     # scheduler left in host mode
+        PAOTAServer(_params(), clients, ChannelConfig(),
+                    SchedulerConfig(n_clients=3, seed=1),
+                    PAOTAConfig(rng="counter"))
+    with pytest.raises(ValueError):     # legacy engine has no counter plans
+        PAOTAServer(_params(), clients, ChannelConfig(),
+                    SchedulerConfig(n_clients=3, seed=1, rng="counter"),
+                    PAOTAConfig(rng="counter", engine="legacy"))

@@ -26,7 +26,7 @@ def test_solvers_agree_small_k(seed):
     rng = np.random.default_rng(seed)
     prob = _rand_problem(rng, 4)
     ex = solve_p2(prob, "exhaustive")
-    for method in ("pgd", "waterfill", "milp"):
+    for method in ("pgd", "waterfill", "waterfill_jnp", "milp"):
         res = solve_p2(prob, method)
         assert res.objective <= ex.objective * 1.02 + 1e-9, method
         assert np.all(res.beta >= -1e-9) and np.all(res.beta <= 1 + 1e-9)
@@ -38,6 +38,19 @@ def test_waterfill_scales_to_k100():
     wf = solve_waterfill(prob)
     pgd = dinkelbach(prob, inner="pgd")
     assert wf.objective <= pgd.objective * 1.001 + 1e-12
+
+
+@pytest.mark.parametrize("k", [4, 37, 100])
+def test_waterfill_jnp_matches_numpy_reference(k):
+    """The jit-traceable float32 solver (the fused round's P2 step) lands
+    on the numpy/float64 water-filling optimum."""
+    rng = np.random.default_rng(k)
+    prob = _rand_problem(rng, k)
+    wf = solve_waterfill(prob)
+    wj = solve_p2(prob, "waterfill_jnp")
+    assert wj.objective == pytest.approx(wf.objective, rel=1e-3)
+    # and it is a valid point of the box
+    assert np.all(wj.beta >= -1e-6) and np.all(wj.beta <= 1 + 1e-6)
 
 
 def test_dinkelbach_monotone_lambda():
