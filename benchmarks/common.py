@@ -6,10 +6,12 @@ Section IV-A) and runs PAOTA / Local SGD / COTAF servers, recording
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -23,6 +25,37 @@ from repro.fl import (COTAFServer, FLClient, FusedPAOTA, LocalSGDServer,
 from repro.models.mlp import init_mlp_params, mlp_apply, mlp_loss
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+
+def write_bench_artifact(name: str, rows: List[Dict],
+                         extra: Optional[Dict] = None) -> str:
+    """Persist one benchmark's rows as a machine-readable JSON artifact —
+    ``<OUT_DIR>/BENCH_<name>.json`` — so the perf trajectory is tracked
+    across PRs instead of scrolling away in CI logs.
+
+    The payload carries the timing rows verbatim plus enough config to
+    make numbers comparable run-to-run (backend, device count, the
+    REPRO_BENCH_* env knobs). ``scripts/ci.sh`` smoke-checks one of these
+    parses after the benchmark smokes. Returns the artifact path."""
+    import jax
+    os.makedirs(OUT_DIR, exist_ok=True)
+    payload = {
+        "name": name,
+        "created_unix": time.time(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "env": {k: v for k, v in os.environ.items()
+                if k.startswith("REPRO_BENCH")},
+        "rows": rows,
+    }
+    if extra:
+        payload["config"] = extra
+    path = os.path.join(OUT_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 @dataclass
@@ -40,8 +73,11 @@ class BenchSetting:
     solver: str = "waterfill"
     engine: str = "batched"      # batched|legacy local-training engine, or
                                  # "fused": PAOTA runs as the on-device
-                                 # lax.scan round (counter RNG; baselines
-                                 # fall back to the batched engine)
+                                 # lax.scan round (counter RNG), or
+                                 # "sharded": the same scan under shard_map
+                                 # over the mesh client axis (needs a
+                                 # multi-device backend; K % devices == 0);
+                                 # baselines fall back to the batched engine
 
     @classmethod
     def from_env(cls, **kw):
@@ -76,15 +112,17 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
     chan = ChannelConfig(n0_dbm_hz=s.n0_dbm_hz)
     sched = SchedulerConfig(n_clients=s.n_clients, delta_t=s.delta_t,
                             seed=s.seed + seed_offset)
-    # "fused" is a PAOTA-only mode; the sync baselines use the batched
-    # engine under it so the comparison stays apples-to-apples
-    engine = "batched" if s.engine == "fused" else s.engine
+    # "fused"/"sharded" are PAOTA-only modes; the sync baselines use the
+    # batched engine under them so the comparison stays apples-to-apples
+    engine = "batched" if s.engine in ("fused", "sharded") else s.engine
     if name == "paota":
-        if s.engine == "fused":
-            # solver is passed through: FusedPAOTA raises on solvers it
-            # cannot run on-device rather than silently substituting
-            srv = FusedPAOTA(params, clients, chan, sched,
-                             PAOTAConfig(solver=s.solver, seed=s.seed))
+        if s.engine in ("fused", "sharded"):
+            # solver is passed through: the on-device drivers raise on
+            # solvers they cannot run rather than silently substituting
+            from repro.fl import ShardedPAOTA
+            cls = ShardedPAOTA if s.engine == "sharded" else FusedPAOTA
+            srv = cls(params, clients, chan, sched,
+                      PAOTAConfig(solver=s.solver, seed=s.seed))
         else:
             srv = PAOTAServer(params, clients, chan, sched,
                               PAOTAConfig(solver=s.solver, seed=s.seed,

@@ -94,10 +94,15 @@ def run(ks=(100, 1000)):
 
 def main():
     smoke = "smoke" in sys.argv[1:]
+    rows = run(ks=(8,) if smoke else (100, 1000))
     print("name,us_per_call,derived")
-    for row in run(ks=(8,) if smoke else (100, 1000)):
+    for row in rows:
         print(f"{row['name']},{row['us_per_call']},{row['derived']}",
               flush=True)
+    from benchmarks.common import write_bench_artifact
+    name = "fused_round_smoke" if smoke else "fused_round"
+    path = write_bench_artifact(name, rows)
+    print(f"# artifact -> {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,15 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
   fl_engine — legacy vs batched federation engine rounds/sec (K up to 1000)
   fused_round — host-loop vs fused lax.scan PAOTA rounds/sec (K up to 1000)
+  sharded_round — fused 1-device vs shard_map'd 8-device PAOTA rounds/sec
+             (K up to 10000; runs in a subprocess with forced host devices)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
+
+Each completed module ALSO writes a machine-readable artifact —
+``experiments/bench/BENCH_<module>.json`` with the rows plus backend/env
+config — so perf is tracked across PRs (scripts/ci.sh smoke-checks one).
 
 Env: REPRO_BENCH_FULL=1 for paper-scale (100 clients); default is a
 CPU-friendly scaled setting with identical structure.
@@ -20,10 +26,13 @@ import sys
 import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
-           "fused_round_bench", "fig3", "fig4", "table1", "ablation"]
+           "fused_round_bench", "sharded_round_bench", "fig3", "fig4",
+           "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
-           "fused_round": "fused_round_bench", "fused": "fused_round_bench"}
+           "fused_round": "fused_round_bench", "fused": "fused_round_bench",
+           "sharded_round": "sharded_round_bench",
+           "sharded": "sharded_round_bench"}
 
 
 def main() -> None:
@@ -34,9 +43,16 @@ def main() -> None:
     for mod_name in wanted:
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            for row in mod.run():
+            rows = list(mod.run())
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']},{row['derived']}",
                       flush=True)
+            from benchmarks.common import write_bench_artifact
+            # BENCH_<name> matches what direct `python -m benchmarks.X`
+            # invocation writes (the `_bench` module suffix is dropped)
+            art = mod_name[:-6] if mod_name.endswith("_bench") else mod_name
+            path = write_bench_artifact(art, rows)
+            print(f"# artifact -> {path}", flush=True)
         except Exception:
             traceback.print_exc()
             failed.append(mod_name)

@@ -1,0 +1,159 @@
+"""Mesh-sharded PAOTA round vs the single-device fused scan.
+
+Strong scaling: same K, 1 device (``FusedPAOTA``) vs the 8-virtual-device
+CPU mesh (``ShardedPAOTA`` — per-client stages parallel, AirComp/P2 as
+psums). Weak scaling: the sharded K on 8 devices against the fused K/8 on
+one device (per-device client load held constant; 1.0x = perfect).
+
+Per K in {1000, 10000} (smoke: K=16):
+
+* ``sharded_round/fused_k{K}``        — fused seconds/round, 1 device.
+* ``sharded_round/sharded_k{K}_dev8`` — sharded seconds/round, 8 devices.
+* ``sharded_round/strong_k{K}``       — fused / sharded at equal K.
+* ``sharded_round/weak_k{K}``         — fused@K/8 / sharded@K.
+
+Virtual CPU devices share the same 2 physical cores, so these numbers
+measure the collective/orchestration overhead of the sharded program, not
+real speedup — the strong ratio is the lower bound a real 8-chip mesh
+starts from (see EXPERIMENTS.md §Sharded PAOTA round).
+
+Host-device forcing must happen before jax initializes, so ``run()``
+re-execs this module in a subprocess with ``XLA_FLAGS=--xla_force_host_
+platform_device_count=8`` and parses the rows back — callable from
+``benchmarks.run`` no matter what the parent process already imported.
+
+``python -m benchmarks.sharded_round_bench smoke`` runs the K=16 pairing
+(the CI guard that keeps the shard_map path compiling) and writes the
+``BENCH_sharded_round_smoke.json`` artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+FORCE_FLAG = "--xla_force_host_platform_device_count=8"
+_SETTINGS = {  # K -> (size ladder, batch, local steps, scan rounds)
+    16: ((48, 64), 32, 5, 3),
+    125: ((48, 64), 32, 5, 10),      # weak-scaling reference for K=1000
+    1000: ((48, 64), 32, 5, 10),
+    1250: ((16, 24), 16, 2, 3),      # weak-scaling reference for K=10000
+    10000: ((16, 24), 16, 2, 3),
+}
+
+
+def _make_engine(k: int, seed: int = 0):
+    from repro.data.partition import partition_noniid
+    from repro.data.pipeline import build_federation
+    from repro.data.synthetic import make_mnist_like
+    from repro.fl import BatchedEngine
+    from repro.models.mlp import mlp_loss
+    sizes, batch, steps, _ = _SETTINGS[k]
+    x, y, _, _ = make_mnist_like(n_train=min(max(20 * k, 2000), 20000),
+                                 n_test=10, seed=1234)
+    parts = partition_noniid(y, n_clients=k, sizes=sizes, seed=seed)
+    fed = build_federation(x, y, parts, seed=seed)
+    return BatchedEngine(fed, mlp_loss, batch_size=batch, lr=0.1,
+                         local_steps=steps)
+
+
+def _time_server(cls, k: int, seed: int = 0, **kw):
+    """(seconds/round steady-state, setup seconds). Setup = construction +
+    first advance (compile + init federation train)."""
+    import jax
+    import numpy as np
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.fl import PAOTAConfig
+    from repro.models.mlp import init_mlp_params
+    rounds = _SETTINGS[k][3]
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    srv = cls(params, _make_engine(k, seed), ChannelConfig(),
+              SchedulerConfig(n_clients=k, seed=seed),
+              PAOTAConfig(seed=seed), **kw)
+    srv.advance(rounds)
+    setup = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    srv.advance(rounds)
+    sec = (time.perf_counter() - t0) / rounds
+    assert np.isfinite(srv.global_vec).all()
+    return sec, setup
+
+
+def _measure(ks) -> list:
+    """Runs INSIDE the forced-device subprocess."""
+    import jax
+    from repro.fl import FusedPAOTA, ShardedPAOTA
+    from repro.launch.mesh import make_client_mesh
+    n_dev = len(jax.devices())
+    mesh = make_client_mesh(min(n_dev, 8))
+    rows = []
+    for k in ks:
+        fused_s, fused_setup = _time_server(FusedPAOTA, k)
+        rows.append({"name": f"sharded_round/fused_k{k}",
+                     "us_per_call": round(fused_s * 1e6, 1),
+                     "derived": f"rounds_per_sec={1.0 / fused_s:.3f};"
+                                f"setup_s={fused_setup:.2f}"})
+        shard_s, shard_setup = _time_server(ShardedPAOTA, k, mesh=mesh)
+        rows.append({"name": f"sharded_round/sharded_k{k}_dev{mesh.size}",
+                     "us_per_call": round(shard_s * 1e6, 1),
+                     "derived": f"rounds_per_sec={1.0 / shard_s:.3f};"
+                                f"setup_s={shard_setup:.2f}"})
+        rows.append({"name": f"sharded_round/strong_k{k}",
+                     "us_per_call": 0,
+                     "derived": f"{fused_s / shard_s:.2f}x"})
+        k_weak = k // mesh.size
+        if k_weak in _SETTINGS:
+            weak_s, _ = _time_server(FusedPAOTA, k_weak)
+            rows.append({"name": f"sharded_round/weak_k{k}",
+                         "us_per_call": 0,
+                         "derived": f"{weak_s / shard_s:.2f}x_of_perfect;"
+                                    f"fused_k{k_weak}_s={weak_s:.4f}"})
+    return rows
+
+
+def run(ks=(1000, 10000)) -> list:
+    """benchmarks.run entry: re-exec with forced host devices (jax may
+    already be initialized single-device in the caller)."""
+    env = dict(os.environ)
+    if "xla_force_host_platform_device_count" not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + FORCE_FLAG).strip()
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as f:
+        cmd = [sys.executable, "-m", "benchmarks.sharded_round_bench",
+               "--emit", f.name] + [str(k) for k in ks]
+        subprocess.run(cmd, env=env, check=True,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+        return json.load(open(f.name))
+
+
+def main():
+    args = sys.argv[1:]
+    if "--emit" in args:                     # forced-device child
+        i = args.index("--emit")
+        out_path, ks = args[i + 1], tuple(int(k) for k in args[i + 2:])
+        rows = _measure(ks)
+        with open(out_path, "w") as f:
+            json.dump(rows, f)
+        return
+    smoke = "smoke" in args
+    ks = (16,) if smoke else (1000, 10000)
+    rows = run(ks=ks)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}",
+              flush=True)
+    from benchmarks.common import write_bench_artifact
+    name = "sharded_round_smoke" if smoke else "sharded_round"
+    # device_count in the artifact header reflects THIS (parent) process;
+    # the measurements ran in the forced-device child — record that too
+    path = write_bench_artifact(name, rows,
+                                extra={"ks": list(ks), "forced_devices": 8})
+    print(f"# artifact -> {path}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,11 +19,14 @@ def main():
     ap.add_argument("--solver", default="waterfill",
                     choices=["waterfill", "pgd", "milp"])
     ap.add_argument("--engine", default="batched",
-                    choices=["batched", "legacy", "fused"],
+                    choices=["batched", "legacy", "fused", "sharded"],
                     help="batched = one jitted vmap/scan call per "
                          "broadcast; legacy = seed per-client loop; fused "
                          "= whole PAOTA round on-device (counter RNG, "
-                         "waterfill_jnp; baselines stay batched)")
+                         "waterfill_jnp; baselines stay batched); sharded "
+                         "= the fused round shard_map'd over the mesh "
+                         "client axis (multi-device backend, --clients "
+                         "divisible by the device count)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 

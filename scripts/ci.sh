@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # CI driver.
 #
-#   scripts/ci.sh          fast tier: everything not marked `slow` (<60s)
-#   CI_FULL=1 scripts/ci.sh   full suite (nightly-style, ~4-5 min on CPU)
+#   scripts/ci.sh          fast tier: everything not marked `slow` (<90s)
+#                          + the 8-virtual-device sharding tests
+#                          + fused-round smoke with artifact check
+#   CI_FULL=1 scripts/ci.sh   full suite (nightly-style) + sharded
+#                          benchmark smoke (8 forced devices, K=16)
 #   CI_BENCH=1 scripts/ci.sh  also run the engine benchmark after tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -14,9 +17,43 @@ else
     python -m pytest -q -m "not slow"
 fi
 
+# multi-device tier: the mesh-sharded round tests on the forced
+# 8-virtual-device backend (tests/conftest.py sets XLA_FLAGS; they are in
+# the fast tier too — this run isolates them so a sharding regression is
+# unmissable in the CI log; the spec-divisibility property tests are
+# device-free and stay in the ordinary tiers)
+python -m pytest -q -m multidevice
+
 # fused-round smoke (1 tiny lax.scan) — keeps the on-device PAOTA path
-# compiling; full numbers via `python -m benchmarks.run fused_round`
+# compiling; full numbers via `python -m benchmarks.run fused_round`.
+# The artifact is removed first so the parse check below cannot pass
+# against a stale file from an earlier run.
+BENCH_OUT="${REPRO_BENCH_OUT:-experiments/bench}"
+rm -f "$BENCH_OUT/BENCH_fused_round_smoke.json"
 python -m benchmarks.fused_round_bench smoke
+
+# benchmark artifacts must stay machine-readable (perf tracked across PRs)
+python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_fused_round_smoke.json"))
+assert art["rows"] and all("us_per_call" in r for r in art["rows"]), art
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows, "
+      f"{art['device_count']} devices)")
+EOF
+
+if [ "${CI_FULL:-0}" = "1" ]; then
+    # sharded-round smoke: K=16 over the forced 8-device mesh in a
+    # subprocess (fused vs shard_map pairing + its JSON artifact)
+    rm -f "$BENCH_OUT/BENCH_sharded_round_smoke.json"
+    python -m benchmarks.sharded_round_bench smoke
+    python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_sharded_round_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("sharded_k16" in n for n in names), names
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
+EOF
+fi
 
 if [ "${CI_BENCH:-0}" = "1" ]; then
     python -m benchmarks.run fl_engine

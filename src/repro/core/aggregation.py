@@ -47,8 +47,22 @@ def guarded_global_update(global_vec, prev_global, agg, varsigma, *,
 
 def paota_aggregate_stacked(stacked_models: jnp.ndarray, powers: jnp.ndarray,
                             mask: jnp.ndarray, key, sigma_n: float,
-                            use_kernel: bool = False):
-    """Eq. (8): w_g^{r+1} = (sum_k b_k p_k w_k + n) / sum_k b_k p_k."""
+                            use_kernel: bool = False, axis_name=None):
+    """Eq. (8): w_g^{r+1} = (sum_k b_k p_k w_k + n) / sum_k b_k p_k.
+
+    ``axis_name``: when the (K, D) stack is laid over mesh client axis/axes
+    inside ``jax.shard_map``, the superposition runs as a psum over that
+    axis (``repro.kernels.aircomp_sum.aircomp_sum_psum``) with the single
+    shared noise realization drawn from the replicated ``key`` and added
+    once, after the collective — the same eq.-6 semantics as the
+    single-device reduction."""
+    if axis_name is not None:
+        from repro.kernels.aircomp_sum import aircomp_sum_psum
+        bp = powers * mask
+        noise = sigma_n * jax.random.normal(key, stacked_models.shape[1:],
+                                            stacked_models.dtype)
+        return aircomp_sum_psum(stacked_models, bp, noise, axis_name,
+                                varsigma_min=VARSIGMA_MIN)
     return aircomp_aggregate(stacked_models, powers, mask, key, sigma_n,
                              use_kernel=use_kernel)
 

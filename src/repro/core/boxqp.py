@@ -94,37 +94,62 @@ def solve_waterfill(prob: P2Problem, grid: int = 4096,
 # ---------------------------------------------------------------------------
 
 def waterfill_beta_jnp(rho, theta, p_max, b, c1: float, c0: float,
-                       grid: int = 4096, refine: int = 60):
+                       grid: int = 4096, refine: int = 60, axis_name=None):
     """Pure-jnp water-filling solve of P2: returns (beta, objective).
 
     Same math as ``solve_waterfill`` with static shapes only: a `grid`-point
     scan over tau followed by `refine` golden-section steps via fori_loop.
     With no active client (b all zero) every candidate t is 0 and the
     returned beta is arbitrary — the caller's zero-uploader guard makes the
-    round a no-op before beta can matter."""
+    round a no-op before beta can matter.
+
+    ``axis_name``: mesh client axis name(s) when the (K,) inputs are this
+    shard's rows under ``jax.shard_map``. The per-tau sums over K and the
+    tau bracket become psum/pmin/pmax collectives; taus, the bracket, and
+    the objective stay replicated, so every shard refines the SAME tau and
+    returns its local slice of the same global beta. ``axis_name=None`` is
+    the historical single-device op sequence, unchanged."""
     rho = jnp.asarray(rho)
     theta = jnp.asarray(theta)
     p_max = jnp.asarray(p_max)
     b = jnp.asarray(b)
+
+    if axis_name is None:
+        def ksum(v, axis=None):
+            return jnp.sum(v, axis=axis)
+        kmin, kmax, kany = jnp.min, jnp.max, jnp.any
+    else:
+        def ksum(v, axis=None):
+            return jax.lax.psum(jnp.sum(v, axis=axis), axis_name)
+
+        def kmin(v):
+            return jax.lax.pmin(jnp.min(v), axis_name)
+
+        def kmax(v):
+            return jax.lax.pmax(jnp.max(v), axis_name)
+
+        def kany(v):
+            return ksum(v.astype(jnp.int32)) > 0
+
     p0 = jnp.clip(p_max * theta, 0.0, p_max)      # beta=0 endpoint
     p1 = jnp.clip(p_max * rho, 0.0, p_max)        # beta=1 endpoint
     lo = jnp.minimum(p0, p1) * b
     hi = jnp.maximum(p0, p1) * b
     active = b > 0
-    any_active = jnp.any(active)
+    any_active = kany(active)
     tau_lo = jnp.where(any_active,
-                       jnp.min(jnp.where(active, lo, jnp.inf)), 0.0)
+                       kmin(jnp.where(active, lo, jnp.inf)), 0.0)
     tau_hi = jnp.where(any_active,
-                       jnp.max(jnp.where(active, hi, -jnp.inf)), 1.0)
+                       kmax(jnp.where(active, hi, -jnp.inf)), 1.0)
 
     def ratio(t):
-        s = jnp.sum(t)
-        return (c1 * jnp.sum(t * t) + c0) / jnp.maximum(s * s, 1e-30)
+        s = ksum(t)
+        return (c1 * ksum(t * t) + c0) / jnp.maximum(s * s, 1e-30)
 
     taus = tau_lo + (tau_hi - tau_lo) * jnp.linspace(0.0, 1.0, grid)
     ts = jnp.clip(taus[:, None], lo[None, :], hi[None, :]) * b[None, :]
-    s = jnp.sum(ts, axis=1)
-    vals = (c1 * jnp.sum(ts * ts, axis=1) + c0) / jnp.maximum(s * s, 1e-30)
+    s = ksum(ts, axis=1)
+    vals = (c1 * ksum(ts * ts, axis=1) + c0) / jnp.maximum(s * s, 1e-30)
     j = jnp.argmin(vals)
     bracket = (taus[jnp.maximum(j - 1, 0)], taus[jnp.minimum(j + 1, grid - 1)])
 

@@ -79,7 +79,8 @@ def build_federation(x, y, parts, seed: int = 0):
     return [ClientData(x[p], y[p], k, seed) for k, p in enumerate(parts)]
 
 
-def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int):
+def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int,
+                       client_ids=None):
     """Stateless minibatch plan for a whole federation: (K, M, B) int32
     indices, client k drawing i.i.d. uniform from range(n_samples[k]).
 
@@ -87,16 +88,25 @@ def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int):
     .round_tag_key``); each client folds in its id, so plans are
     independent across clients and rounds. Pure and jit-traceable —
     callable from inside a ``lax.scan`` step. Padding rows are never
-    selected because draws are bounded by the true per-client size."""
+    selected because draws are bounded by the true per-client size.
+
+    ``client_ids``: the GLOBAL client ids behind ``n_samples``'s rows
+    (default ``arange(K)``). A mesh shard holding clients [off, off+k_loc)
+    passes its id slice and gets bit-identical rows to the full-federation
+    plan — each client's draw depends only on (key, its id, its size), so
+    plans shard over the client axis with no cross-device draws."""
     n_samples = jnp.asarray(n_samples, jnp.int32)
+    if client_ids is None:
+        client_ids = jnp.arange(n_samples.shape[0], dtype=jnp.uint32)
+    else:
+        client_ids = jnp.asarray(client_ids, jnp.uint32)
 
     def one(cid, nk):
         ck = jax.random.fold_in(key, cid)
         return jax.random.randint(ck, (n_batches, batch_size), 0, nk,
                                   dtype=jnp.int32)
 
-    k = n_samples.shape[0]
-    return jax.vmap(one)(jnp.arange(k, dtype=jnp.uint32), n_samples)
+    return jax.vmap(one)(client_ids, n_samples)
 
 
 @dataclass

@@ -4,3 +4,4 @@ from repro.fl.engine import BatchedEngine, LegacyEngine, make_engine  # noqa: F4
 from repro.fl.metrics import evaluate, time_to_accuracy, write_csv  # noqa: F401
 from repro.fl.server import PAOTAConfig, PAOTAServer  # noqa: F401
 from repro.fl.fused import FusedPAOTA  # noqa: F401  (after server: dep order)
+from repro.fl.sharded import ShardedPAOTA  # noqa: F401  (after fused)

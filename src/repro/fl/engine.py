@@ -147,12 +147,15 @@ class BatchedEngine:
         self.plan = "counter"
         self._plan_key = key
 
-    def round_plan(self, round_idx):
+    def round_plan(self, round_idx, client_ids=None, n_samples=None):
         """Counter-mode (K, M, B) index plan for broadcast round
-        ``round_idx`` (host path and fused path call the same function)."""
+        ``round_idx`` (host path and fused path call the same function).
+        A mesh shard passes its ``client_ids`` slice plus the matching
+        ``n_samples`` rows and gets exactly its rows of the full plan."""
         key = round_tag_key(self._plan_key, round_idx, TAG_BATCH)
-        return counter_batch_plan(key, self._n_dev, self.local_steps,
-                                  self.batch_size)
+        n = self._n_dev if n_samples is None else n_samples
+        return counter_batch_plan(key, n, self.local_steps,
+                                  self.batch_size, client_ids=client_ids)
 
     def local_train(self, params, ids: Sequence[int],
                     round_idx=None) -> np.ndarray:

@@ -5,24 +5,11 @@ The host-path ``PAOTAServer`` (repro.fl.server) makes ~8 host<->device
 round-trips through numpy per period — scheduler advance, rho/theta
 factors, P2 solve, channel draw, power cap (7), AirComp — which caps
 simulation throughput far below hardware speed at K = 1000+. Here every
-stage is pure jnp over array state:
-
-  carry = (t, time, ready, busy_until, model_round,
-           w_g, w_g_prev, pending models, pending starts)
-
-  round_step(carry):
-    1. scheduler advance   — repro.core.scheduler.sched_advance
-    2. rho/theta factors   — staleness_factor / cosine similarity (eq. 25)
-    3. P2 water-filling    — repro.core.boxqp.waterfill_beta_jnp
-    4. channel + cap (7)   — sample_channel_gains / effective_power_cap
-    5. AirComp (eqs. 6+8)  — masked weighted sum + AWGN / normalizer
-    6. zero-uploader guard — guarded_global_update (lax.select: hold w_g
-                             when the normalizer is at the clamp)
-    7. broadcast + local train — counter minibatch plans + the batched
-                             engine's vmap/scan SGD, masked into `pending`
-
-and ``lax.scan`` drives R rounds with zero host round-trips inside the
-scan.
+stage is pure jnp over array state: the round transition itself lives in
+``repro.fl.runtime.paota_round_step`` (``RoundCarry`` in, ``RoundCarry``
+out — one functional core shared with the mesh-sharded driver
+``repro.fl.sharded.ShardedPAOTA``), and this driver runs it single-device
+with ``lax.scan`` over R rounds and zero host round-trips inside the scan.
 
 Randomness is counter-based (repro.core.scheduler.round_tag_key): latency,
 channel, noise, and minibatch draws are keyed on (seed, round, tag), never
@@ -37,38 +24,23 @@ epoch-shuffled) — see EXPERIMENTS.md §Fused PAOTA round.
 """
 from __future__ import annotations
 
-from typing import List, NamedTuple
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aircomp import (VARSIGMA_MIN, ChannelConfig,
-                                effective_power_cap, sample_channel_gains)
-from repro.core.aggregation import (guarded_global_update,
-                                    paota_aggregate_stacked, ravel)
-from repro.core.boxqp import waterfill_beta_jnp
-from repro.core.power_control import (cosine_similarity, p2_constants,
-                                      power_from_beta, similarity_factor,
-                                      staleness_factor)
+from repro.core.aircomp import ChannelConfig, sample_channel_gains
+from repro.core.aggregation import ravel
+from repro.core.power_control import p2_constants
 from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
-                                  counter_latencies, round_tag_key,
-                                  sched_advance, sched_broadcast)
+                                  counter_latencies, round_tag_key)
 from repro.fl.engine import BatchedEngine, make_engine
+from repro.fl.runtime import (RoundCarry, RoundCfg, RoundStreams,
+                              init_round_carry, scan_rounds)
 from repro.fl.server import PAOTAConfig
 
-
-class RoundCarry(NamedTuple):
-    """Device-resident PAOTA state threaded through the scan."""
-    t: jnp.ndarray            # i32 — scheduler round counter
-    time: jnp.ndarray         # f32 — simulated clock (seconds)
-    ready: jnp.ndarray        # (K,) bool — b_k at the aggregation slot
-    busy_until: jnp.ndarray   # (K,) f32 — local-training completion times
-    model_round: jnp.ndarray  # (K,) i32 — round each client trains on
-    global_vec: jnp.ndarray   # (d,) — w_g^t
-    prev_global: jnp.ndarray  # (d,) — w_g^{t-1} (similarity direction)
-    pending: jnp.ndarray      # (K, d) — in-flight trained local models
-    starts: jnp.ndarray       # (K, d) — the global each was trained from
+__all__ = ["FusedPAOTA", "RoundCarry"]
 
 
 class FusedPAOTA:
@@ -78,6 +50,14 @@ class FusedPAOTA:
     (the legacy per-client loop cannot live inside jit). ``advance(n)``
     runs n rounds as a single ``lax.scan``; ``round()`` is the one-round
     convenience for drop-in use in the existing drivers.
+
+    RNG contract: the on-device scan ALWAYS runs counter-based streams —
+    ``cfg.rng`` / ``sched_cfg.rng`` are ignored (host-mode sequential
+    PCG64 cursors cannot live inside a scan step), so switching a host
+    server with default (host-RNG) configs to this driver changes the
+    random trajectory statistically, never silently mid-run. The host
+    server must be EXPLICITLY put in counter mode to serve as this
+    driver's draw-identical reference.
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
@@ -87,12 +67,13 @@ class FusedPAOTA:
                              "server; the fused round is already one fused "
                              "device call")
         if cfg.solver not in ("waterfill", "waterfill_jnp"):
-            raise ValueError(f"FusedPAOTA solves P2 with the jnp "
+            raise ValueError(f"{type(self).__name__} solves P2 with the jnp "
                              f"water-filling solver only; solver="
                              f"{cfg.solver!r} needs the host-path server")
         engine = make_engine(clients, cfg.engine)
         if not isinstance(engine, BatchedEngine):
-            raise ValueError("FusedPAOTA requires the batched engine")
+            raise ValueError(f"{type(self).__name__} requires the batched "
+                             "engine")
         self.engine = engine
         self.chan = chan
         self.sched_cfg = sched_cfg
@@ -101,10 +82,15 @@ class FusedPAOTA:
         self._init_vec = jnp.asarray(vec, jnp.float32)
         self.d = int(vec.size)
         self.k = engine.n_clients
-        self._c1, self._c0 = p2_constants(cfg.smooth_l, cfg.eps_bound,
-                                          self.k, self.d, chan.sigma_n2)
-        self._sigma_n = chan.sigma_n   # concrete float (jnp.sqrt is not
-                                       # callable through float() in-trace)
+        c1, c0 = p2_constants(cfg.smooth_l, cfg.eps_bound, self.k, self.d,
+                              chan.sigma_n2)
+        # chan.sigma_n is a concrete float (jnp.sqrt is not callable through
+        # float() in-trace), so the whole RoundCfg stays static
+        self._rcfg = RoundCfg(omega=cfg.omega, c1=c1, c0=c0,
+                              p_max_watts=chan.p_max_watts,
+                              sigma_n=chan.sigma_n,
+                              delta_t=sched_cfg.delta_t,
+                              transmit_delta=cfg.transmit == "delta")
         self._lat_key = jax.random.PRNGKey(sched_cfg.seed)
         self._srv_key = jax.random.PRNGKey(cfg.seed)
         engine.enable_counter_plan(self._srv_key)
@@ -123,106 +109,26 @@ class FusedPAOTA:
         params = self.unravel(global_vec)
         return self.engine._train_all(params, x, y, idx)
 
-    def _latency(self, broadcast_round):
-        return counter_latencies(self._lat_key, broadcast_round, self.k,
-                                 self.sched_cfg.lat_lo, self.sched_cfg.lat_hi)
-
-    def _init_carry(self, vec, x, y) -> RoundCarry:
-        """Round-0 kick-off: broadcast w_g^0 to everyone and precompute
-        their local training (mirrors PAOTAServer.__init__)."""
-        pending = self._local_train_all(vec, x, y, 0)
-        return RoundCarry(
-            t=jnp.int32(0),
-            time=jnp.float32(0.0),
-            ready=jnp.zeros((self.k,), bool),
-            busy_until=self._latency(0),
-            model_round=jnp.zeros((self.k,), jnp.int32),
-            global_vec=vec,
-            prev_global=vec,
-            pending=pending,
-            starts=jnp.broadcast_to(vec, (self.k, self.d)),
+    def _streams(self) -> RoundStreams:
+        """Single-device streams: callbacks see the whole federation, so
+        the round core's (K,) rows are the global client set."""
+        return RoundStreams(
+            local_train=self._local_train_all,
+            latencies=lambda r: counter_latencies(
+                self._lat_key, r, self.k, self.sched_cfg.lat_lo,
+                self.sched_cfg.lat_hi),
+            channel=lambda t: sample_channel_gains(
+                round_tag_key(self._srv_key, t, TAG_CHANNEL), self.k,
+                self.chan),
+            noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
         )
 
-    def _step(self, carry: RoundCarry, x, y):
-        cfg, chan, sc = self.cfg, self.chan, self.sched_cfg
-
-        # 1. scheduler advance: who finished inside this period, staleness.
-        # The slot clock is recomputed as (t+1) * delta_t rather than
-        # accumulated +=, so the float32 clock cannot drift from the host
-        # reference's float64 one over long scans (a `busy_until <= time`
-        # boundary flip would silently fork the trajectories; a residual
-        # single-rounding difference remains for delta_t values inexact in
-        # float32)
-        time = (carry.t + 1).astype(jnp.float32) * jnp.float32(sc.delta_t)
-        ready, stal = sched_advance(carry.ready, carry.busy_until,
-                                    carry.model_round, time, carry.t)
-        b = ready.astype(jnp.float32)
-        stal = stal.astype(jnp.float32)
-
-        # 2. staleness + gradient-similarity factors (eq. 25)
-        deltas = carry.pending - carry.starts
-        gdir = carry.global_vec - carry.prev_global
-        gnorm = jnp.sqrt(jnp.sum(gdir * gdir))
-        cos = jnp.where(gnorm < 1e-12, 0.0, cosine_similarity(deltas, gdir))
-        theta = similarity_factor(cos)
-        rho = staleness_factor(stal, cfg.omega)
-
-        # 3. P2 -> beta -> powers (exact water-filling, pure jnp)
-        p_max = jnp.full((self.k,), chan.p_max_watts, jnp.float32)
-        beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b,
-                                          self._c1, self._c0)
-        powers = power_from_beta(beta, rho, theta, p_max)
-
-        # 4. instantaneous power constraint (7) under the sampled channel
-        payload = deltas if cfg.transmit == "delta" else carry.pending
-        h = sample_channel_gains(round_tag_key(self._srv_key, carry.t,
-                                               TAG_CHANNEL), self.k, chan)
-        w_norm2 = jnp.sum(payload * payload, axis=1)
-        powers = jnp.minimum(powers, effective_power_cap(w_norm2, h,
-                                                         chan.p_max_watts))
-
-        # 5. AirComp superposition + AWGN + normalization (eqs. 6+8) —
-        # the same jnp helper the host reference calls, so the two paths
-        # share one reduction (bit-identical, not merely allclose)
-        agg, varsigma = paota_aggregate_stacked(
-            payload, powers, b,
-            round_tag_key(self._srv_key, carry.t, TAG_NOISE), self._sigma_n)
-
-        # 6. zero-uploader guard: hold w_g when nothing superposed
-        new_global, new_prev = guarded_global_update(
-            carry.global_vec, carry.prev_global, agg, varsigma,
-            delta=cfg.transmit == "delta")
-
-        # 7. broadcast w^{r+1}: every uploader restarts local training
-        t_next = carry.t + 1
-        lat = self._latency(t_next)
-        n_ready, n_busy, n_model = sched_broadcast(
-            ready, carry.busy_until, carry.model_round, ready, time, lat,
-            t_next)
-        trained = self._local_train_all(new_global, x, y, t_next)
-        pending = jnp.where(ready[:, None], trained, carry.pending)
-        starts = jnp.where(ready[:, None], new_global[None, :], carry.starts)
-
-        n_upl = jnp.sum(b)
-        denom = jnp.maximum(n_upl, 1.0)
-        out = {
-            "n_participants": n_upl,
-            "time": time,
-            "mean_staleness": jnp.sum(stal * b) / denom,
-            "beta_mean": jnp.sum(beta * b) / denom,
-            "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
-            "p2_objective": p2_obj,
-        }
-        carry = RoundCarry(t=t_next, time=time, ready=n_ready,
-                           busy_until=n_busy, model_round=n_model,
-                           global_vec=new_global, prev_global=new_prev,
-                           pending=pending, starts=starts)
-        return carry, out
+    def _init_carry(self, vec, x, y) -> RoundCarry:
+        return init_round_carry(vec, x, y, streams=self._streams())
 
     def _run_scan(self, carry: RoundCarry, x, y, n_rounds: int):
-        def step(c, _):
-            return self._step(c, x, y)
-        return jax.lax.scan(step, carry, None, length=n_rounds)
+        return scan_rounds(carry, x, y, n_rounds, rcfg=self._rcfg,
+                           streams=self._streams(), axis_name=None)
 
     # ------------------------------------------------------------------
     # host-facing API (PAOTAServer-compatible)

@@ -1,0 +1,240 @@
+"""Functional PAOTA round core — ONE implementation of the aggregation
+period, shared by every driver.
+
+``paota_round_step`` is the pure round transition (``RoundCarry`` in,
+``RoundCarry`` out): scheduler advance -> eq.-25 factors -> water-filling
+P2 -> channel + instantaneous cap (7) -> AirComp -> zero-uploader-guarded
+update -> broadcast + local train. It is parameterized by
+
+* ``RoundCfg`` — the static problem constants (Theorem-1 c1/c0, channel
+  power/noise, the aggregation period), a plain NamedTuple of Python
+  scalars closed over at trace time;
+* ``RoundStreams`` — the per-driver data/RNG callbacks (local training,
+  latency draws, channel draws, the per-round noise key). The callbacks
+  are what let the same core run single-device (callbacks see all K
+  clients) and mesh-sharded (callbacks see this shard's K/n slice of
+  identical global draws);
+* ``axis_name`` — ``None`` for the single-device form (the exact op
+  sequence ``FusedPAOTA._step`` always ran — the extraction is
+  bit-identical), or the mesh client axis name(s) under ``jax.shard_map``:
+  per-client stages (local SGD, factors, channel, power) stay fully
+  parallel and only the AirComp superposition, the P2 water-filling
+  reductions, and the round metrics cross shards as ``psum``/``pmin``/
+  ``pmax`` collectives.
+
+Consumers: ``repro.fl.fused.FusedPAOTA`` (single device, scan over
+rounds), ``repro.fl.sharded.ShardedPAOTA`` (the same scan under
+``shard_map`` over the mesh client axis), and the host-path
+``repro.fl.server.PAOTAServer`` whose numpy round consumes the shared
+stage helpers (``eq25_factors`` / ``constraint7_powers``) so the three
+implementations cannot drift apart stage by stage.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import (guarded_global_update,
+                                    paota_aggregate_stacked)
+from repro.core.aircomp import VARSIGMA_MIN, effective_power_cap
+from repro.core.boxqp import waterfill_beta_jnp
+from repro.core.power_control import (cosine_similarity, power_from_beta,
+                                      similarity_factor, staleness_factor)
+from repro.core.scheduler import sched_advance, sched_broadcast
+
+
+class RoundCarry(NamedTuple):
+    """Device-resident PAOTA state threaded through the scan.
+
+    Under the sharded driver the ``(K,)``/``(K, d)`` fields are laid over
+    the mesh client axis (each shard carries its K/n rows); the scalars and
+    ``(d,)`` globals are replicated.
+    """
+    t: jnp.ndarray            # i32 — scheduler round counter
+    time: jnp.ndarray         # f32 — simulated clock (seconds)
+    ready: jnp.ndarray        # (K,) bool — b_k at the aggregation slot
+    busy_until: jnp.ndarray   # (K,) f32 — local-training completion times
+    model_round: jnp.ndarray  # (K,) i32 — round each client trains on
+    global_vec: jnp.ndarray   # (d,) — w_g^t
+    prev_global: jnp.ndarray  # (d,) — w_g^{t-1} (similarity direction)
+    pending: jnp.ndarray      # (K, d) — in-flight trained local models
+    starts: jnp.ndarray       # (K, d) — the global each was trained from
+
+
+class RoundCfg(NamedTuple):
+    """Static per-federation constants of the round (Python scalars only —
+    closed over at trace time, never traced)."""
+    omega: float              # staleness constant Omega (Sec. IV-A)
+    c1: float                 # L eps^2 K   (P2 term-d scale)
+    c0: float                 # 2 L d sigma_n^2 (P2 term-e numerator)
+    p_max_watts: float        # per-client power budget P_max
+    sigma_n: float            # channel noise std (concrete float)
+    delta_t: float            # aggregation period (seconds)
+    transmit_delta: bool      # True: clients transmit dw_k; False: w_k
+
+
+class RoundStreams(NamedTuple):
+    """Per-driver callbacks: how this driver's shard of clients trains and
+    draws its randomness. All callbacks are traced (called inside jit /
+    shard_map); under sharding each returns this shard's rows of the SAME
+    global draws the single-device form makes, so trajectories agree.
+    """
+    local_train: Callable     # (global_vec, x, y, round) -> (K_local, d)
+    latencies: Callable       # (round) -> (K_local,) latency draws
+    channel: Callable         # (round) -> (K_local,) |h_k| draws
+    noise_key: Callable       # (round) -> AWGN key (replicated)
+
+
+# ---------------------------------------------------------------------------
+# shared stage helpers (host server + fused/sharded core)
+# ---------------------------------------------------------------------------
+
+def eq25_factors(pending, starts, global_vec, prev_global, stal, omega,
+                 use_kernel: bool = False):
+    """Stage 2 of the round — eq. 25 inputs: local-update deltas, staleness
+    factors rho_k, gradient-similarity factors theta_k. Pure jnp; per-client
+    along the leading axis, so it is shard-local under the client mesh axis
+    (the cosine reduction runs over d, which every shard holds whole).
+
+    Returns (deltas, rho, theta)."""
+    deltas = pending - starts
+    gdir = global_vec - prev_global
+    gnorm = jnp.sqrt(jnp.sum(gdir * gdir))
+    cos = jnp.where(gnorm < 1e-12, 0.0,
+                    cosine_similarity(deltas, gdir, use_kernel=use_kernel))
+    theta = similarity_factor(cos)
+    rho = staleness_factor(stal, omega)
+    return deltas, rho, theta
+
+
+def constraint7_powers(powers, payload, h, p_max):
+    """Stage 4 — instantaneous power constraint (7) under the sampled
+    channel: p_k <- min(p_k, |h_k| sqrt(P_max / ||w_k||^2)). Per-client,
+    shard-local."""
+    w_norm2 = jnp.sum(payload * payload, axis=1)
+    return jnp.minimum(powers, effective_power_cap(w_norm2, h, p_max))
+
+
+# ---------------------------------------------------------------------------
+# the round transition
+# ---------------------------------------------------------------------------
+
+def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
+                     streams: RoundStreams, axis_name=None):
+    """One PAOTA aggregation period as a pure function.
+
+    ``axis_name=None`` reproduces ``FusedPAOTA``'s historical op sequence
+    bit-for-bit. With a mesh axis name (or tuple of names), the (K,) /
+    (K, d) carry rows are this shard's clients and the cross-client
+    reductions go through collectives.
+
+    Returns (next_carry, per-round metrics dict of replicated scalars)."""
+    k_local = carry.ready.shape[0]
+
+    def ksum(v, axis=None):
+        s = jnp.sum(v, axis=axis)
+        return s if axis_name is None else jax.lax.psum(s, axis_name)
+
+    # 1. scheduler advance: who finished inside this period, staleness.
+    # The slot clock is recomputed as (t+1) * delta_t rather than
+    # accumulated +=, so the float32 clock cannot drift from the host
+    # reference's float64 one over long scans (a `busy_until <= time`
+    # boundary flip would silently fork the trajectories; a residual
+    # single-rounding difference remains for delta_t values inexact in
+    # float32)
+    time = (carry.t + 1).astype(jnp.float32) * jnp.float32(rcfg.delta_t)
+    ready, stal = sched_advance(carry.ready, carry.busy_until,
+                                carry.model_round, time, carry.t)
+    b = ready.astype(jnp.float32)
+    stal = stal.astype(jnp.float32)
+
+    # 2. staleness + gradient-similarity factors (eq. 25)
+    deltas, rho, theta = eq25_factors(carry.pending, carry.starts,
+                                      carry.global_vec, carry.prev_global,
+                                      stal, rcfg.omega)
+
+    # 3. P2 -> beta -> powers (exact water-filling, pure jnp; the grid and
+    # golden-section reductions over K run as psums under sharding)
+    p_max = jnp.full((k_local,), rcfg.p_max_watts, jnp.float32)
+    beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b, rcfg.c1, rcfg.c0,
+                                      axis_name=axis_name)
+    powers = power_from_beta(beta, rho, theta, p_max)
+
+    # 4. instantaneous power constraint (7) under the sampled channel
+    payload = deltas if rcfg.transmit_delta else carry.pending
+    h = streams.channel(carry.t)
+    powers = constraint7_powers(powers, payload, h, rcfg.p_max_watts)
+
+    # 5. AirComp superposition + AWGN + normalization (eqs. 6+8) — the
+    # same jnp helper the host reference calls; under sharding the
+    # superposition is a psum over the client axis with the single shared
+    # noise realization joining once, after the reduction
+    agg, varsigma = paota_aggregate_stacked(
+        payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
+        axis_name=axis_name)
+
+    # 6. zero-uploader guard: hold w_g when nothing superposed
+    new_global, new_prev = guarded_global_update(
+        carry.global_vec, carry.prev_global, agg, varsigma,
+        delta=rcfg.transmit_delta)
+
+    # 7. broadcast w^{r+1}: every uploader restarts local training
+    t_next = carry.t + 1
+    lat = streams.latencies(t_next)
+    n_ready, n_busy, n_model = sched_broadcast(
+        ready, carry.busy_until, carry.model_round, ready, time, lat, t_next)
+    trained = streams.local_train(new_global, x, y, t_next)
+    pending = jnp.where(ready[:, None], trained, carry.pending)
+    starts = jnp.where(ready[:, None], new_global[None, :], carry.starts)
+
+    n_upl = ksum(b)
+    denom = jnp.maximum(n_upl, 1.0)
+    out = {
+        "n_participants": n_upl,
+        "time": time,
+        "mean_staleness": ksum(stal * b) / denom,
+        "beta_mean": ksum(beta * b) / denom,
+        "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
+        # a zero-uploader P2 is vacuous (every candidate t is 0 and the
+        # solver's ratio degenerates to c0/clamp ~ 1e22); report inf like
+        # the host reference's skipped-round branch does
+        "p2_objective": jnp.where(n_upl > 0, p2_obj, jnp.inf),
+    }
+    carry = RoundCarry(t=t_next, time=time, ready=n_ready,
+                       busy_until=n_busy, model_round=n_model,
+                       global_vec=new_global, prev_global=new_prev,
+                       pending=pending, starts=starts)
+    return carry, out
+
+
+def init_round_carry(vec, x, y, *, streams: RoundStreams) -> RoundCarry:
+    """Round-0 kick-off: broadcast w_g^0 to everyone and precompute their
+    local training (mirrors ``PAOTAServer.__init__``). Shapes follow the
+    streams' view of the federation (all K single-device; K/n per shard)."""
+    pending = streams.local_train(vec, x, y, 0)
+    k_local = pending.shape[0]
+    return RoundCarry(
+        t=jnp.int32(0),
+        time=jnp.float32(0.0),
+        ready=jnp.zeros((k_local,), bool),
+        busy_until=streams.latencies(0),
+        model_round=jnp.zeros((k_local,), jnp.int32),
+        global_vec=vec,
+        prev_global=vec,
+        pending=pending,
+        starts=jnp.broadcast_to(vec, (k_local, vec.shape[0])),
+    )
+
+
+def scan_rounds(carry: RoundCarry, x, y, n_rounds: int, *, rcfg: RoundCfg,
+                streams: RoundStreams, axis_name=None):
+    """``lax.scan`` of ``paota_round_step`` over ``n_rounds`` periods —
+    zero host round-trips inside. The scan nests cleanly under
+    ``jax.shard_map`` (the sharded driver wraps THIS function, so a whole
+    multi-round advance is one collective program)."""
+    def step(c, _):
+        return paota_round_step(c, x, y, rcfg=rcfg, streams=streams,
+                                axis_name=axis_name)
+    return jax.lax.scan(step, carry, None, length=n_rounds)

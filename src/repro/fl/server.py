@@ -39,15 +39,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aircomp import (VARSIGMA_MIN, ChannelConfig,
-                                effective_power_cap, sample_channel_gains)
+                                sample_channel_gains)
 from repro.core.aggregation import (guarded_global_update,
                                     paota_aggregate_stacked, ravel)
 from repro.core.dinkelbach import solve_p2
-from repro.core.power_control import (build_p2, cosine_similarity,
-                                      similarity_factor, staleness_factor)
+from repro.core.power_control import build_p2
 from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
                                   SemiAsyncScheduler, round_tag_key)
 from repro.fl.engine import BatchedEngine, make_engine
+from repro.fl.runtime import constraint7_powers, eq25_factors
 
 
 @dataclass
@@ -157,18 +157,17 @@ class PAOTAServer:
             return info
 
         stacked = self._pending_models
-        deltas = stacked - self._pending_starts
 
-        # similarity factor vs last global direction (eq. 25)
-        gdir = self.global_vec - self.prev_global
-        if np.linalg.norm(gdir) < 1e-12:
-            cos = np.zeros(k_tot)
-        else:
-            cos = np.asarray(cosine_similarity(jnp.asarray(deltas),
-                                               jnp.asarray(gdir),
-                                               use_kernel=self.cfg.use_kernel))
-        theta = np.asarray(similarity_factor(cos))
-        rho = np.asarray(staleness_factor(stal.astype(float), self.cfg.omega))
+        # staleness + similarity factors (eq. 25) — the SAME stage helper
+        # the fused/sharded round core runs (repro.fl.runtime), so the host
+        # reference cannot drift from the on-device implementations
+        deltas, rho, theta = eq25_factors(
+            jnp.asarray(stacked), jnp.asarray(self._pending_starts),
+            jnp.asarray(self.global_vec), jnp.asarray(self.prev_global),
+            jnp.asarray(stal, jnp.float32), self.cfg.omega,
+            use_kernel=self.cfg.use_kernel)
+        deltas = np.asarray(deltas)
+        rho, theta = np.asarray(rho, float), np.asarray(theta, float)
 
         # P2 -> beta -> powers
         p_max = np.full(k_tot, self.chan.p_max_watts)
@@ -181,14 +180,13 @@ class PAOTAServer:
         # payload: full models (paper, eq. 6) or local updates (beyond-paper)
         payload = deltas if self.cfg.transmit == "delta" else stacked
 
-        # instantaneous power constraint (7) under the sampled channel
+        # instantaneous power constraint (7) under the sampled channel —
+        # shared stage helper (repro.fl.runtime.constraint7_powers)
         sub = self._round_key(r, TAG_CHANNEL)
-        h = np.asarray(sample_channel_gains(sub, k_tot, self.chan))
-        w_norm2 = np.sum(payload.astype(np.float64) ** 2, axis=1)
-        cap = np.asarray(effective_power_cap(jnp.asarray(w_norm2),
-                                             jnp.asarray(h),
-                                             self.chan.p_max_watts))
-        powers = np.minimum(powers, cap)
+        h = sample_channel_gains(sub, k_tot, self.chan)
+        powers = np.asarray(constraint7_powers(jnp.asarray(powers, jnp.float32),
+                                               jnp.asarray(payload), h,
+                                               self.chan.p_max_watts))
 
         # AirComp aggregation (eqs. 6+8) with the degenerate-normalizer
         # guard: if the capped powers somehow sum to ~0, hold the global

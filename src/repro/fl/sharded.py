@@ -1,0 +1,160 @@
+"""Mesh-sharded PAOTA: the fused round scanned under ``jax.shard_map``
+over the mesh client axis.
+
+``FusedPAOTA`` runs the whole aggregation period as one device call — but
+on ONE device: a K = 10^4..10^5 federation serializes through a single
+chip while the rest of the mesh idles. ``ShardedPAOTA`` lays the round
+core's (K,) / (K, d) carry rows and the engine's padded (K, n_max, ...)
+federation over the mesh client axis (``repro.launch.mesh.data_axes`` /
+``client_axes_for``; specs from ``repro.sharding.rules.batch_specs``) and
+runs the SAME ``repro.fl.runtime`` scan inside ``shard_map``:
+
+* per-client stages — local SGD (vmap over this shard's clients),
+  latency/scheduler state, channel draw, eq.-25 factors, power cap (7) —
+  are embarrassingly parallel: zero collectives;
+* the AirComp superposition is ONE psum over the client axis per round
+  (``repro.kernels.aircomp_sum.aircomp_sum_psum`` — the TPU-native
+  realization of the wireless MAC), plus the water-filling P2 grid
+  reductions and the round metrics (a handful of scalar psums).
+
+Equivalence contract: every shard consumes its rows of the SAME global
+counter-RNG draws the single-device scan makes — latency and channel
+vectors are drawn full-K from the replicated round key and sliced by
+shard offset; minibatch plans fold in GLOBAL client ids
+(``counter_batch_plan(client_ids=...)``); the AWGN realization is drawn
+once from the replicated noise key. The sharded trajectory is therefore
+allclose to ``FusedPAOTA`` round for round (float reduction order across
+shards is the only difference; zero-uploader periods hold w_g
+bit-identically on every shard) — tests/test_sharded_round.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:                                    # jax >= 0.6 exports it at top level
+    from jax import shard_map
+except ImportError:                     # 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.aircomp import ChannelConfig, sample_channel_gains
+from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
+                                  counter_latencies, round_tag_key)
+from repro.fl.fused import FusedPAOTA
+from repro.fl.runtime import RoundCarry, RoundStreams, scan_rounds
+from repro.fl.server import PAOTAConfig
+from repro.launch.mesh import data_axes
+from repro.sharding.rules import batch_specs
+
+OUT_KEYS = ("n_participants", "time", "mean_staleness", "beta_mean",
+            "varsigma", "p2_objective")
+
+
+class ShardedPAOTA(FusedPAOTA):
+    """Drop-in ``FusedPAOTA`` whose scan runs sharded over the mesh client
+    axis.
+
+    ``mesh`` defaults to all local devices as one client axis
+    (``repro.launch.mesh.make_client_mesh``); ``client_axes`` defaults to
+    the mesh's ("pod",)/"data" axes (``data_axes``) — pass
+    ``client_axes_for(model_cfg, mesh)`` to follow an architecture's
+    placement policy. The client-axis extent must divide K (no client
+    padding: a fractional shard would silently skew the AirComp psum).
+    """
+
+    def __init__(self, init_params, clients, chan: ChannelConfig,
+                 sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
+                 mesh=None, client_axes=None):
+        if mesh is None:
+            from repro.launch.mesh import make_client_mesh
+            mesh = make_client_mesh()
+        self.mesh = mesh
+        axes = tuple(client_axes) if client_axes else data_axes(mesh)
+        if not axes:
+            raise ValueError(f"mesh {mesh.axis_names} has no client axis")
+        self.client_axes = axes
+        self.n_shards = int(math.prod(mesh.shape[a] for a in axes))
+        # super() builds the engine, RoundCfg, keys, and jits _run_scan —
+        # which the overrides below turn into the shard_map program
+        super().__init__(init_params, clients, chan, sched_cfg, cfg)
+        if self.k % self.n_shards:
+            raise ValueError(
+                f"client-axis extent {self.n_shards} must divide K="
+                f"{self.k} clients (mesh {dict(mesh.shape)}, client axes "
+                f"{axes}); pad or regroup the federation")
+        self.k_local = self.k // self.n_shards
+        ax = axes if len(axes) != 1 else axes[0]
+        self._ax = ax
+        self._carry_specs = RoundCarry(
+            t=P(), time=P(), ready=P(ax), busy_until=P(ax),
+            model_round=P(ax), global_vec=P(), prev_global=P(),
+            pending=P(ax, None), starts=P(ax, None))
+        data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
+                              (), (axes,))
+        self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
+        self._out_specs = {k: P() for k in OUT_KEYS}
+        # place the padded federation over the client axis ONCE — advance()
+        # then never pays a reshard (the scan's in_specs match)
+        self.engine._x = jax.device_put(
+            self.engine._x, NamedSharding(mesh, self._x_spec))
+        self.engine._y = jax.device_put(
+            self.engine._y, NamedSharding(mesh, self._y_spec))
+
+    # ------------------------------------------------------------------
+    # shard-local streams: identical global draws, this shard's rows
+    # ------------------------------------------------------------------
+    def _shard_offset(self):
+        """First global client id on this shard (traced, inside shard_map):
+        row-major flattening of the client-axis coordinates."""
+        idx = jnp.int32(0)
+        for a in self.client_axes:
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx * self.k_local
+
+    def _shard_streams(self, offset) -> RoundStreams:
+        k, k_loc = self.k, self.k_local
+        sc, chan = self.sched_cfg, self.chan
+        n_dev = self.engine._n_dev          # (K,) consts: replicated, tiny
+
+        def slice_k(full):
+            return jax.lax.dynamic_slice(full, (offset,), (k_loc,))
+
+        def local_train(global_vec, x, y, r):
+            cids = (offset.astype(jnp.uint32)
+                    + jnp.arange(k_loc, dtype=jnp.uint32))
+            idx = self.engine.round_plan(r, client_ids=cids,
+                                         n_samples=slice_k(n_dev))
+            return self.engine._train_all(self.unravel(global_vec), x, y, idx)
+
+        return RoundStreams(
+            local_train=local_train,
+            latencies=lambda r: slice_k(counter_latencies(
+                self._lat_key, r, k, sc.lat_lo, sc.lat_hi)),
+            channel=lambda t: slice_k(sample_channel_gains(
+                round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan)),
+            noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
+        )
+
+    # ------------------------------------------------------------------
+    # the sharded scan (replaces FusedPAOTA's single-device _run_scan;
+    # _init_carry is inherited — per-client init math has no cross-client
+    # reduction, so GSPMD runs it row-parallel over the same placed data)
+    # ------------------------------------------------------------------
+    def _run_scan(self, carry: RoundCarry, x, y, n_rounds: int):
+        axes = self.client_axes
+
+        def body(c, xs, ys):
+            streams = self._shard_streams(self._shard_offset())
+            return scan_rounds(c, xs, ys, n_rounds, rcfg=self._rcfg,
+                               streams=streams, axis_name=axes)
+
+        smap = shard_map(body, self.mesh,
+                         in_specs=(self._carry_specs, self._x_spec,
+                                   self._y_spec),
+                         out_specs=(self._carry_specs, self._out_specs),
+                         check_rep=True)
+        return smap(carry, x, y)

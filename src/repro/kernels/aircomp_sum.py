@@ -77,3 +77,40 @@ def aircomp_sum_pallas(stacked: jnp.ndarray, bp: jnp.ndarray,
         interpret=interpret,
     )(bp[None, :].astype(jnp.float32), stacked, noise[None, :])
     return out[0, :d]
+
+
+# ---------------------------------------------------------------------------
+# shard-aware entry point (mesh client axis)
+# ---------------------------------------------------------------------------
+
+def aircomp_sum_psum(stacked: jnp.ndarray, bp: jnp.ndarray,
+                     noise: jnp.ndarray, axis_name,
+                     varsigma_min: float | None = None):
+    """AirComp reduction for use INSIDE ``jax.shard_map`` with the K axis
+    laid over mesh client axis/axes ``axis_name``.
+
+    stacked: (K_local, D) this shard's client payloads; bp: (K_local,)
+    masked transmit powers b_k p_k; noise: (D,) the SAME AWGN realization
+    on every shard (replicated key — eq. 6 adds noise once at the server,
+    not per client).
+
+    The local partial superposition is the identical (1, K)x(K, D)
+    contraction the single-device Pallas kernel tiles; the cross-shard sum
+    is one psum, and the noise joins the accumulator dtype once AFTER the
+    collective so every shard normalizes the same received y.
+
+    Returns (aggregate (D,), varsigma) — both replicated across shards.
+    """
+    if varsigma_min is None:
+        # the division clamp doubles as the zero-uploader threshold; there
+        # is exactly one value of it (lazy import: cycle-free, and keeps
+        # this module importable without touching core)
+        from repro.core.aircomp import VARSIGMA_MIN
+        varsigma_min = VARSIGMA_MIN
+    acc = jax.lax.dot_general(
+        bp[None, :].astype(jnp.float32), stacked, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]            # (D,) local partial
+    acc = jax.lax.psum(acc, axis_name)
+    varsigma = jnp.maximum(jax.lax.psum(jnp.sum(bp), axis_name), varsigma_min)
+    agg = ((acc + noise.astype(acc.dtype)) / varsigma).astype(stacked.dtype)
+    return agg, varsigma

@@ -60,3 +60,30 @@ def cosine_partials_pallas(deltas: jnp.ndarray, g: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((k, 2), jnp.float32),
         interpret=interpret,
     )(deltas, g[None, :])
+
+
+# ---------------------------------------------------------------------------
+# shard-aware entry point (mesh client axis)
+# ---------------------------------------------------------------------------
+
+def cosine_sim_shard(deltas: jnp.ndarray, g: jnp.ndarray, axis_name=None,
+                     eps: float = 1e-12) -> jnp.ndarray:
+    """Per-client cosines for use INSIDE ``jax.shard_map`` with K laid over
+    the mesh client axis/axes.
+
+    deltas: (K_local, D) this shard's client deltas; g: (D,) the replicated
+    global direction. The eq.-25 reduction runs over D — which every shard
+    holds whole under the client-axis layout — so each client's cosine is
+    computed entirely on its own shard with NO collective; this entry point
+    exists to make that contract explicit at shard_map call sites
+    (``axis_name`` is accepted for symmetry with the psum-bearing
+    reductions and intentionally unused). The math delegates to the ONE
+    cosine implementation (``repro.core.power_control.cosine_similarity``,
+    the same function the round core's eq.-25 stage calls), so there is no
+    second formula to keep in sync.
+
+    Returns (K_local,) cosines (replicated math, shard-local rows).
+    """
+    del axis_name  # reduction is over D: shard-local by construction
+    from repro.core.power_control import cosine_similarity
+    return cosine_similarity(deltas, g, eps=eps)

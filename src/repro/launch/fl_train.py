@@ -11,7 +11,13 @@ the seed's per-client loop (see EXPERIMENTS.md §Batched federation
 engine); ``--engine fused`` runs the ENTIRE PAOTA round on-device
 (repro.fl.fused.FusedPAOTA — scheduler, eq.-25 factors, water-filling P2,
 channel + power cap, AirComp, broadcast and local training as one jitted
-lax.scan step; see EXPERIMENTS.md §Fused PAOTA round).
+lax.scan step; see EXPERIMENTS.md §Fused PAOTA round); ``--engine
+sharded`` runs the same round scanned under ``jax.shard_map`` over the
+mesh client axis (repro.fl.sharded.ShardedPAOTA — per-client stages
+parallel across devices, AirComp/P2 as psums; needs a multi-device
+backend, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU,
+with --clients divisible by the device count; see EXPERIMENTS.md
+§Sharded PAOTA round).
 """
 from examples.fl_noniid_mnist import main
 

@@ -27,11 +27,31 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_cpu_mesh(*, data: int = 1, model: int = 1):
-    """Tiny mesh over real local devices (tests on CPU)."""
+    """Tiny mesh over real local devices (tests on CPU).
+
+    On a CPU-only host extra devices can be forced BEFORE jax initializes
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the test
+    suite's conftest does this; ``benchmarks.sharded_round_bench``
+    re-execs itself with it set). Once jax has initialized, the flag is
+    inert — hence the hard error here rather than a silent 1-device mesh.
+    """
     n = data * model
     if len(jax.devices()) < n:
-        raise RuntimeError(f"need {n} devices, have {len(jax.devices())}")
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())}; on CPU force "
+            f"virtual devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            f"initializes (set it in the environment, not after import)")
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(shards: int | None = None):
+    """All-devices 1-model-axis mesh (("data", "model") = (n, 1)) for the
+    mesh-sharded PAOTA round: the whole device pool becomes the client
+    axis (``data``), each client replica fitting a single device — the
+    small-federation analogue of DESIGN.md §4's flattened-client layout."""
+    n = shards if shards is not None else len(jax.devices())
+    return make_cpu_mesh(data=n, model=1)
 
 
 def data_axes(mesh) -> Tuple[str, ...]:

@@ -30,10 +30,21 @@ except ModuleNotFoundError:
         def draw(self, rng) -> int:
             return int(rng.integers(self.lo, self.hi + 1))
 
+    class _SampledSpec:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def draw(self, rng):
+            return self.options[int(rng.integers(0, len(self.options)))]
+
     class st:  # noqa: N801 - mimics `strategies as st`
         @staticmethod
         def integers(min_value: int, max_value: int) -> _IntSpec:
             return _IntSpec(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options) -> "_SampledSpec":
+            return _SampledSpec(options)
 
     def settings(**_kwargs):
         """No-op: the fallback ignores max_examples/deadline tuning."""

@@ -1,0 +1,47 @@
+"""Suite-wide fixtures: force a multi-device CPU backend BEFORE jax
+initializes.
+
+The mesh-sharded PAOTA tests need >= 8 devices; CI runs on 2-core CPU
+boxes with exactly one XLA CPU device. ``--xla_force_host_platform_
+device_count`` can only take effect if it is in ``XLA_FLAGS`` before the
+first jax backend initialization, so this conftest (imported by pytest
+before any test module) appends it at import time — UNLESS jax was
+already imported by an earlier plugin/conftest, in which case forcing is
+impossible and the multi-device tests skip gracefully via
+``require_host_devices``.
+
+Everything else in the suite is device-count-agnostic: single-device
+computations place on device 0 exactly as before.
+"""
+import os
+import sys
+
+import pytest
+
+FORCED_HOST_DEVICES = 8
+
+if ("jax" not in sys.modules
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={FORCED_HOST_DEVICES}"
+    ).strip()
+
+
+def require_host_devices(n: int):
+    """Skip (never error) when the backend came up with < n devices —
+    e.g. jax was imported before this conftest could set XLA_FLAGS, or a
+    real accelerator backend ignores host-device forcing."""
+    import jax
+    if len(jax.devices()) < n:
+        pytest.skip(f"needs {n} devices, backend has {len(jax.devices())} "
+                    f"(host-device forcing unavailable)")
+
+
+@pytest.fixture
+def client_mesh_8():
+    """(8, 1) ("data", "model") mesh over the forced host devices."""
+    require_host_devices(8)
+    from repro.launch.mesh import make_client_mesh
+    return make_client_mesh(8)

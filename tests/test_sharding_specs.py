@@ -1,0 +1,90 @@
+"""Property tests for the client-stack sharding rules.
+
+``stack_client_specs`` / ``batch_specs`` feed pjit in_shardings, which
+hard-error on any sharded dim that does not divide its mesh-axis extent.
+The ``pad`` fallback guard in ``repro.sharding.rules._base_spec`` exists
+exactly to drop non-dividing assignments (odd vocabs, 9/14/36-head
+attention on an 8-wide model axis, 8-expert MoEs on a 16-wide EP axis) —
+these tests pin that guard for EVERY config in ``repro.configs`` on 1-,
+2-, and 8-device meshes in both client-over-data and TP-heavy layouts.
+"""
+import jax
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import client_axes_for
+from repro.launch.shapes import InputShape
+from repro.launch.steps import abstract_params, train_batch_struct
+from repro.sharding.rules import batch_specs, stack_client_specs
+
+# (data, model) layouts per device count: client-over-data (n, 1) plus a
+# TP-heavy split that forces the divisibility fallback for odd head/vocab
+# counts
+LAYOUTS = [(1, 1), (2, 1), (1, 2), (8, 1), (2, 4), (1, 8)]
+SHAPE = InputShape("spec_test", seq_len=128, global_batch=64, kind="train")
+
+
+class _Mesh:
+    """Shape-only mesh stand-in (the rules read axis_names + shape only —
+    same trick as tests/test_substrates.py, so 1/2/8 'devices' need no
+    backend)."""
+
+    def __init__(self, data, model):
+        self.axis_names = ("data", "model")
+        self.shape = {"data": data, "model": model}
+        self.size = data * model
+
+
+def _assert_divisible(specs, tree, mesh, what):
+    leaves_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    leaves_t = jax.tree_util.tree_leaves(tree)
+    assert len(leaves_s) == len(leaves_t)
+    for spec, leaf in zip(leaves_s, leaves_t):
+        assert len(tuple(spec)) <= len(leaf.shape), (what, spec, leaf.shape)
+        for i, ax in enumerate(tuple(spec)):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[i] % size == 0, (what, spec, leaf.shape, size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_stack_and_batch_specs_divisible(arch, layout):
+    """Every config x every 1/2/8-device layout: the client-stacked param
+    specs and the (K, M, B, ...) batch specs must divide exactly."""
+    cfg = get_config(arch)
+    mesh = _Mesh(*layout)
+    client_axes = client_axes_for(cfg, mesh)
+    n_client = int(np.prod([mesh.shape[a] for a in client_axes])) or 1
+    k = 2 * n_client                       # client dim always shard-divisible
+
+    tree = abstract_params(cfg, stack=k)
+    specs = stack_client_specs(tree, cfg, mesh, client_axes)
+    _assert_divisible(specs, tree, mesh, (arch, layout, "params"))
+
+    batch = train_batch_struct(cfg, SHAPE, k, local_steps=3)
+    bspecs = batch_specs(batch, (),
+                         lead_axes=(tuple(client_axes) if client_axes
+                                    else (), ()))
+    _assert_divisible(bspecs, batch, mesh, (arch, layout, "batch"))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from(ARCH_IDS), st.sampled_from(LAYOUTS),
+       st.integers(1, 6))
+def test_pad_guard_property(arch, layout, k_mult):
+    """Property form: for any client-count multiple of the client axis,
+    no leaf ever gets a non-dividing assignment (the `pad` guard must
+    catch every case the name-based rules mis-assign)."""
+    cfg = get_config(arch)
+    mesh = _Mesh(*layout)
+    client_axes = client_axes_for(cfg, mesh)
+    n_client = int(np.prod([mesh.shape[a] for a in client_axes])) or 1
+    tree = abstract_params(cfg, stack=k_mult * n_client)
+    specs = stack_client_specs(tree, cfg, mesh, client_axes)
+    _assert_divisible(specs, tree, mesh, (arch, layout, k_mult))

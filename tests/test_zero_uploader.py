@@ -82,6 +82,36 @@ def test_zero_uploader_legacy_engine(world):
     np.testing.assert_array_equal(srv.global_vec, g0)
 
 
+@pytest.mark.multidevice
+@pytest.mark.parametrize("transmit", ["model", "delta"])
+def test_zero_uploader_sharded_round_holds_global(world, transmit):
+    """The guard survives shard_map: a zero-uploader period on a
+    multi-device mesh (every shard's psum sees an all-zero mask) holds w_g
+    bit-identical on every shard and resumes cleanly once uploads land."""
+    from conftest import require_host_devices
+    from repro.fl import ShardedPAOTA
+    require_host_devices(2)     # K=6 shards over a (2, 1) client mesh
+    x, y, parts = world
+    clients = [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+               for d in build_federation(x, y, parts)]
+    from repro.launch.mesh import make_cpu_mesh
+    srv = ShardedPAOTA(init_mlp_params(jax.random.PRNGKey(0)), clients,
+                       ChannelConfig(),
+                       SchedulerConfig(seed=1, delta_t=8.0, n_clients=K,
+                                       lat_lo=30.0, lat_hi=40.0),
+                       PAOTAConfig(transmit=transmit),
+                       mesh=make_cpu_mesh(data=2, model=1))
+    g0 = srv.global_vec.copy()
+    rows = srv.advance(3)                # t in {8,16,24} < lat_lo
+    assert all(r["n_participants"] == 0 for r in rows)
+    assert all(r["varsigma"] == 0.0 for r in rows)
+    np.testing.assert_array_equal(srv.global_vec, g0)
+    rows = srv.advance(3)                # t up to 48 >= lat_hi
+    assert any(r["n_participants"] > 0 for r in rows)
+    assert not np.array_equal(srv.global_vec, g0)
+    assert np.isfinite(srv.global_vec).all()
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 64), st.integers(0, 100_000))
 def test_capped_powers_satisfy_constraint_7(k, seed):
