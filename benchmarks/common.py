@@ -76,8 +76,12 @@ class BenchSetting:
                                  # lax.scan round (counter RNG), or
                                  # "sharded": the same scan under shard_map
                                  # over the mesh client axis (needs a
-                                 # multi-device backend; K % devices == 0);
+                                 # multi-device backend; non-divisible K
+                                 # pads with masked phantom clients);
                                  # baselines fall back to the batched engine
+    params_mode: str = "raveled" # fused/sharded model carry: "raveled"
+                                 # (flat (K, d) stack) | "pytree" (params
+                                 # tree carried natively by the round core)
 
     @classmethod
     def from_env(cls, **kw):
@@ -122,7 +126,8 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
             from repro.fl import ShardedPAOTA
             cls = ShardedPAOTA if s.engine == "sharded" else FusedPAOTA
             srv = cls(params, clients, chan, sched,
-                      PAOTAConfig(solver=s.solver, seed=s.seed))
+                      PAOTAConfig(solver=s.solver, seed=s.seed),
+                      params_mode=s.params_mode)
         else:
             srv = PAOTAServer(params, clients, chan, sched,
                               PAOTAConfig(solver=s.solver, seed=s.seed,

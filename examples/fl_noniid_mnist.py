@@ -25,14 +25,22 @@ def main():
                          "= whole PAOTA round on-device (counter RNG, "
                          "waterfill_jnp; baselines stay batched); sharded "
                          "= the fused round shard_map'd over the mesh "
-                         "client axis (multi-device backend, --clients "
-                         "divisible by the device count)")
+                         "client axis (multi-device backend; a client "
+                         "count the devices don't divide pads with masked "
+                         "phantom clients)")
+    ap.add_argument("--params-mode", default="raveled",
+                    choices=["raveled", "pytree"],
+                    help="fused/sharded model carry: raveled = flat (K, d) "
+                         "stack (historical); pytree = the params tree "
+                         "carried natively by the round core (allclose "
+                         "trajectories, tree-reduced psums)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
     s = BenchSetting.from_env(n_rounds=args.rounds, n_clients=args.clients,
                               n0_dbm_hz=args.n0, solver=args.solver,
-                              engine=args.engine)
+                              engine=args.engine,
+                              params_mode=args.params_mode)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

@@ -27,8 +27,12 @@ python -m pytest -q -m multidevice
 # fused-round smoke (1 tiny lax.scan) — keeps the on-device PAOTA path
 # compiling; full numbers via `python -m benchmarks.run fused_round`.
 # The artifact is removed first so the parse check below cannot pass
-# against a stale file from an earlier run.
+# against a stale file from an earlier run. The previous PR's committed
+# artifacts are snapshotted FIRST: benchmarks/diff.py compares the fresh
+# run against them and fails on >2x wall-clock regressions.
 BENCH_OUT="${REPRO_BENCH_OUT:-experiments/bench}"
+BENCH_BASELINE="$(mktemp -d)"
+cp "$BENCH_OUT"/BENCH_*.json "$BENCH_BASELINE"/ 2>/dev/null || true
 rm -f "$BENCH_OUT/BENCH_fused_round_smoke.json"
 python -m benchmarks.fused_round_bench smoke
 
@@ -54,6 +58,10 @@ assert any("sharded_k16" in n for n in names), names
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
 fi
+
+# perf trajectory gate: every artifact the smokes regenerated must stay
+# within 2x of the previous PR's committed numbers (row-by-row wall clock)
+python -m benchmarks.diff --baseline "$BENCH_BASELINE" --current "$BENCH_OUT"
 
 if [ "${CI_BENCH:-0}" = "1" ]; then
     python -m benchmarks.run fl_engine

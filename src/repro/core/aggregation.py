@@ -1,8 +1,13 @@
 """PAOTA aggregation — the paper's round update (eq. 8/9) in two forms:
 
 1. ``paota_aggregate_stacked``: the FL-simulator form. Client models stacked
-   as a (K, D) matrix; fused weighted sum + channel noise + normalization
-   (optionally via the Pallas ``aircomp_sum`` kernel).
+   along a leading K axis — either one raveled (K, D) matrix or an arbitrary
+   params pytree of (K, ...) leaves. The weighted superposition + channel
+   noise + normalization run per leaf with ONE flat AWGN realization for the
+   whole model (drawn once from ``key`` and split across leaves in
+   tree_flatten order), so the pytree and raveled forms of the same model
+   consume bit-identical noise. The single-(K, D)-leaf case is the exact
+   historical op sequence (optionally via the Pallas ``aircomp_sum`` kernel).
 
 2. ``paota_allreduce``: the datacenter/shard_map form. Each device group on
    the client mesh axis holds ONE client's payload; the AirComp superposition
@@ -16,6 +21,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 from repro.core.aircomp import VARSIGMA_MIN, aircomp_aggregate
@@ -35,36 +41,93 @@ def guarded_global_update(global_vec, prev_global, agg, varsigma, *,
     ~1e-12 clamp, and assigning it would destroy the global model. The
     guard holds both w_g AND prev_global (the gradient-similarity
     direction w_g^t - w_g^{t-1} must not collapse to zero from a skipped
-    period). Pure jnp select — the same code path serves the host
-    reference server and the jitted fused round.
+    period). Pure jnp select over every leaf of the (pytree) global — the
+    same code path serves the host reference server and the jitted fused
+    round; a raveled global is the single-leaf case.
 
     Returns (new_global, new_prev_global)."""
-    cand = global_vec + agg if delta else agg
     has_uploaders = varsigma > threshold
-    return (jnp.where(has_uploaders, cand, global_vec),
-            jnp.where(has_uploaders, global_vec, prev_global))
+
+    def upd(g, a):
+        cand = g + a if delta else a
+        return jnp.where(has_uploaders, cand, g)
+
+    return (jax.tree_util.tree_map(upd, global_vec, agg),
+            jax.tree_util.tree_map(
+                lambda g, pg: jnp.where(has_uploaders, g, pg),
+                global_vec, prev_global))
 
 
-def paota_aggregate_stacked(stacked_models: jnp.ndarray, powers: jnp.ndarray,
+def stacked_tree_noise(key, stacked_leaves, sigma_n):
+    """ONE eq.-6 AWGN realization for the whole model: a flat float32 draw
+    of the total model size, split per leaf in tree_flatten order (leaf i
+    gets the next prod(shape[1:]) entries, shaped to its trailing dims).
+
+    Splitting one flat draw — instead of folding a subkey per leaf — makes
+    the noise a function of the MODEL, not of how its params happen to be
+    split into leaves: the 4-leaf pytree form of an MLP and its raveled
+    (K, D) form consume bit-identical realizations (the single-leaf split
+    is exactly the historical ``normal(key, (D,))``), which is what the
+    pytree-vs-raveled equivalence tests pin."""
+    sizes = [int(np.prod(l.shape[1:])) for l in stacked_leaves]
+    flat = sigma_n * jax.random.normal(key, (sum(sizes),), jnp.float32)
+    out, off = [], 0
+    for leaf, size in zip(stacked_leaves, sizes):
+        out.append(flat[off:off + size].reshape(leaf.shape[1:]))
+        off += size
+    return out
+
+
+def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
                             mask: jnp.ndarray, key, sigma_n: float,
                             use_kernel: bool = False, axis_name=None):
     """Eq. (8): w_g^{r+1} = (sum_k b_k p_k w_k + n) / sum_k b_k p_k.
 
-    ``axis_name``: when the (K, D) stack is laid over mesh client axis/axes
-    inside ``jax.shard_map``, the superposition runs as a psum over that
-    axis (``repro.kernels.aircomp_sum.aircomp_sum_psum``) with the single
-    shared noise realization drawn from the replicated ``key`` and added
-    once, after the collective — the same eq.-6 semantics as the
-    single-device reduction."""
+    ``stacked_models``: a pytree of client-stacked (K, ...) leaves; the
+    raveled federation passes its bare (K, D) matrix (single-leaf pytree)
+    and runs the exact historical op sequence. Returns (aggregate pytree /
+    (D,) vector, varsigma).
+
+    ``axis_name``: when the K axis is laid over mesh client axis/axes
+    inside ``jax.shard_map``, the superposition runs as ONE psum over that
+    axis per round — per-leaf local partials are flattened and concatenated
+    (``repro.kernels.aircomp_sum.aircomp_sum_tree_psum``), not psum'd leaf
+    by leaf — with the single shared noise realization drawn from the
+    replicated ``key`` and added once, after the collective: the same
+    eq.-6 semantics as the single-device reduction."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_models)
+    single = len(leaves) == 1 and leaves[0].ndim == 2
+    bp = powers * mask
     if axis_name is not None:
-        from repro.kernels.aircomp_sum import aircomp_sum_psum
-        bp = powers * mask
-        noise = sigma_n * jax.random.normal(key, stacked_models.shape[1:],
-                                            stacked_models.dtype)
-        return aircomp_sum_psum(stacked_models, bp, noise, axis_name,
-                                varsigma_min=VARSIGMA_MIN)
-    return aircomp_aggregate(stacked_models, powers, mask, key, sigma_n,
-                             use_kernel=use_kernel)
+        from repro.kernels.aircomp_sum import (aircomp_sum_psum,
+                                               aircomp_sum_tree_psum)
+        noise = stacked_tree_noise(key, leaves, sigma_n)
+        if single:
+            agg, varsigma = aircomp_sum_psum(
+                leaves[0], bp, noise[0].astype(leaves[0].dtype), axis_name,
+                varsigma_min=VARSIGMA_MIN)
+            return jax.tree_util.tree_unflatten(treedef, [agg]), varsigma
+        agg_leaves, varsigma = aircomp_sum_tree_psum(
+            leaves, bp, noise, axis_name, varsigma_min=VARSIGMA_MIN)
+        return jax.tree_util.tree_unflatten(treedef, agg_leaves), varsigma
+    if single and use_kernel:
+        return aircomp_aggregate(leaves[0], powers, mask, key, sigma_n,
+                                 use_kernel=True)
+    varsigma = jnp.maximum(jnp.sum(bp), VARSIGMA_MIN)
+    # a STATICALLY zero sigma (noiseless ablation, e.g. the train step's
+    # sigma_over_varsigma=0) skips the model-sized AWGN draw entirely —
+    # XLA does not fold a float multiply-by-zero away
+    noiseless = isinstance(sigma_n, (int, float)) and sigma_n == 0.0
+    noise = None if noiseless else stacked_tree_noise(key, leaves, sigma_n)
+    agg = []
+    for i, leaf in enumerate(leaves):
+        l2 = leaf.reshape((leaf.shape[0], -1))
+        acc = jnp.einsum("k,kd->d", bp.astype(leaf.dtype), l2)
+        if not noiseless:
+            acc = acc + noise[i].reshape(-1).astype(leaf.dtype)
+        out = acc / varsigma.astype(leaf.dtype)
+        agg.append(out.reshape(leaf.shape[1:]))
+    return jax.tree_util.tree_unflatten(treedef, agg), varsigma
 
 
 def paota_allreduce(local_payload, power: jnp.ndarray, ready: jnp.ndarray,

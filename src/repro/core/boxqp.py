@@ -43,34 +43,89 @@ def _t_bounds(prob: P2Problem):
     return lo, hi
 
 
-def _ratio(t, c1, c0):
-    s = np.sum(t)
-    if s <= 1e-30:
-        return np.inf
-    return (c1 * np.sum(t * t) + c0) / (s * s)
+class _PrefixEvaluator:
+    """O(log K) per-tau evaluation of S1(tau) = sum_k clip(tau, lo, hi)
+    and S2(tau) = sum of squares, over the ACTIVE clients only.
+
+    The dense grid evaluation materializes a (grid, K) matrix — 320 MB of
+    float64 temporaries per solve at K = 10^4 — which was the numpy host
+    path's scale ceiling. Sorting lo/hi once and prefix-summing turns every
+    tau into three searchsorted lookups:
+
+        S1(tau) = sum_{hi_k < tau} hi_k  +  sum_{lo_k > tau} lo_k
+                  + tau * #{lo_k <= tau <= hi_k}
+
+    (ties land on t_k = tau = bound, so the boundary side is value-exact).
+    Same math as the dense path up to float summation order.
+    """
+
+    def __init__(self, lo: np.ndarray, hi: np.ndarray):
+        self.lo_s = np.sort(lo)
+        self.hi_s = np.sort(hi)
+        self.n = len(lo)
+        self.cum_lo = np.concatenate([[0.0], np.cumsum(self.lo_s)])
+        self.cum_lo2 = np.concatenate([[0.0], np.cumsum(self.lo_s ** 2)])
+        self.cum_hi = np.concatenate([[0.0], np.cumsum(self.hi_s)])
+        self.cum_hi2 = np.concatenate([[0.0], np.cumsum(self.hi_s ** 2)])
+
+    def sums(self, taus):
+        taus = np.asarray(taus, float)
+        i_hi = np.searchsorted(self.hi_s, taus, side="left")   # hi_k < tau
+        i_lo = np.searchsorted(self.lo_s, taus, side="right")  # lo_k <= tau
+        n_mid = i_lo - i_hi                                    # interior
+        s1 = (self.cum_hi[i_hi] + (self.cum_lo[-1] - self.cum_lo[i_lo])
+              + n_mid * taus)
+        s2 = (self.cum_hi2[i_hi] + (self.cum_lo2[-1] - self.cum_lo2[i_lo])
+              + n_mid * taus * taus)
+        return s1, s2
+
+    def objective(self, taus, c1: float, c0: float):
+        s1, s2 = self.sums(taus)
+        return (c1 * s2 + c0) / np.maximum(s1, 1e-30) ** 2
+
+
+# dense (grid, K) evaluation below this K; prefix-sum path above it. The
+# two differ only in float summation order; the threshold keeps every
+# historical small-K trajectory bit-identical.
+PREFIX_K_THRESHOLD = 4096
 
 
 def solve_waterfill(prob: P2Problem, grid: int = 4096,
-                    refine: int = 60) -> SolveResult:
+                    refine: int = 60, method: str = "auto") -> SolveResult:
+    """Exact water-filling P2 solve. ``method``: "dense" evaluates the
+    (grid, K) matrix directly (historical path), "prefix" uses the
+    sorted-prefix-sum evaluator (O((K + grid) log K) time, O(K + grid)
+    memory — the K >= 10^4 host path), "auto" picks by K."""
     lo, hi = _t_bounds(prob)
     active = prob.b > 0
     if not np.any(active):
         return SolveResult(beta=np.zeros(prob.K), objective=np.inf,
                            lam=0.0, iterations=0, inner="waterfill")
+    if method == "auto":
+        method = "prefix" if prob.K >= PREFIX_K_THRESHOLD else "dense"
     tau_lo, tau_hi = float(np.min(lo[active])), float(np.max(hi[active]))
     taus = np.linspace(tau_lo, tau_hi, grid)
-    ts = np.clip(taus[:, None], lo[None, :], hi[None, :]) * prob.b[None, :]
-    vals = (prob.c1 * np.sum(ts * ts, 1) + prob.c0) / np.maximum(
-        np.sum(ts, 1), 1e-30) ** 2
+    if method == "prefix":
+        ev = _PrefixEvaluator(lo[active], hi[active])
+
+        def objective(ts_arr):
+            return ev.objective(ts_arr, prob.c1, prob.c0)
+    else:
+        def objective(ts_arr):
+            ts = np.clip(ts_arr[:, None], lo[None, :], hi[None, :]) \
+                * prob.b[None, :]
+            return (prob.c1 * np.sum(ts * ts, 1) + prob.c0) / np.maximum(
+                np.sum(ts, 1), 1e-30) ** 2
+
+    # grid scan + golden-section refine, one loop for both evaluators
+    vals = objective(taus)
     j = int(np.argmin(vals))
     a, bnd = taus[max(j - 1, 0)], taus[min(j + 1, grid - 1)]
-    # golden-section refine
     gr = (np.sqrt(5.0) - 1) / 2
     for _ in range(refine):
         m1 = bnd - gr * (bnd - a)
         m2 = a + gr * (bnd - a)
-        f1 = _ratio(np.clip(m1, lo, hi) * prob.b, prob.c1, prob.c0)
-        f2 = _ratio(np.clip(m2, lo, hi) * prob.b, prob.c1, prob.c0)
+        f1, f2 = objective(np.array([m1, m2]))
         if f1 < f2:
             bnd = m2
         else:
@@ -177,14 +232,24 @@ def waterfill_beta_jnp(rho, theta, p_max, b, c1: float, c0: float,
     return beta, ratio(p)
 
 
+# host-path cache: the eager form re-dispatches ~hundreds of primitives
+# (and re-lowers several) per round, which dominated the host reference's
+# per-round cost next to the np.asarray transfers; c1/c0 are static per
+# federation so each server instance compiles exactly one program
+_waterfill_jit = jax.jit(waterfill_beta_jnp,
+                         static_argnames=("c1", "c0", "grid", "refine",
+                                          "axis_name"))
+
+
 def solve_waterfill_jnp(prob: P2Problem) -> SolveResult:
     """SolveResult wrapper over ``waterfill_beta_jnp`` — the host-path entry
     (solver="waterfill_jnp") running the exact solver code the fused round
-    jits, so host and fused trajectories agree to float32 reduction order."""
-    beta, obj = waterfill_beta_jnp(
+    jits (here under a cached jit), so host and fused trajectories agree to
+    float32 reduction order."""
+    beta, obj = _waterfill_jit(
         jnp.asarray(prob.rho, jnp.float32), jnp.asarray(prob.theta, jnp.float32),
         jnp.asarray(prob.p_max, jnp.float32), jnp.asarray(prob.b, jnp.float32),
-        float(prob.c1), float(prob.c0))
+        c1=float(prob.c1), c0=float(prob.c0))
     obj = float(obj)
     return SolveResult(beta=np.asarray(beta, float), objective=obj,
                        lam=1.0 / max(obj, 1e-30), iterations=1,

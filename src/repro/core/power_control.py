@@ -26,8 +26,11 @@ exploits the diagonal+rank-one structure; see DESIGN.md §3).
 """
 from __future__ import annotations
 
+import functools
+import operator
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,14 +45,57 @@ def similarity_factor(cos_sim):
     return (cos_sim + 1.0) / 2.0
 
 
+# ---------------------------------------------------------------------------
+# tree-reduced per-client scalars
+#
+# The federated model is a params pytree whose leaves are client-stacked
+# (K, ...) arrays; a raveled federation is just the single-(K, D)-leaf
+# instance (a bare jnp array IS a one-leaf pytree, so the raveled callers
+# need no adapter and execute the exact historical op sequence). Every
+# cross-leaf scalar is accumulated as per-leaf partials summed in
+# tree_flatten order — under a mesh client axis these per-client values are
+# shard-local (the reduction runs over the model dims, which every shard
+# holds whole), so none of them costs a collective.
+# ---------------------------------------------------------------------------
+
+def _leaf2d(x):
+    """(K, ...) leaf -> (K, prod(trailing)) view; identity for (K, D)."""
+    return x.reshape((x.shape[0], -1))
+
+
+def _accumulate(parts):
+    return functools.reduce(operator.add, parts)
+
+
+def client_sq_norms(tree):
+    """(K,) per-client ||.||^2 over every leaf's trailing dims."""
+    return _accumulate([jnp.sum(_leaf2d(l) * _leaf2d(l), -1)
+                        for l in jax.tree_util.tree_leaves(tree)])
+
+
+def client_dots(tree, vec_tree):
+    """(K,) per-client <leaf_k, vec> accumulated across leaves."""
+    return _accumulate([_leaf2d(l) @ g.reshape(-1)
+                        for l, g in zip(jax.tree_util.tree_leaves(tree),
+                                        jax.tree_util.tree_leaves(vec_tree))])
+
+
+def global_sq_norm(vec_tree):
+    """Scalar ||vec||^2 over all leaves of an unstacked params tree."""
+    return _accumulate([jnp.sum(g * g)
+                        for g in jax.tree_util.tree_leaves(vec_tree)])
+
+
 def cosine_similarity(deltas, global_dir, use_kernel: bool = False, eps=1e-12):
-    """cos(dw_k, g) for stacked deltas (K, D) vs g (D,)."""
+    """cos(dw_k, g) per client: stacked deltas pytree ((K, ...) leaves — a
+    bare (K, D) matrix is the single-leaf case) vs the matching global
+    direction pytree ((...) leaves / a (D,) vector)."""
     if use_kernel:
         from repro.kernels.ops import cosine_sim
         return cosine_sim(deltas, global_dir)
-    num = deltas @ global_dir
-    den = jnp.sqrt(jnp.maximum(jnp.sum(deltas * deltas, -1), eps)
-                   * jnp.maximum(jnp.sum(global_dir * global_dir), eps))
+    num = client_dots(deltas, global_dir)
+    den = jnp.sqrt(jnp.maximum(client_sq_norms(deltas), eps)
+                   * jnp.maximum(global_sq_norm(global_dir), eps))
     return num / den
 
 

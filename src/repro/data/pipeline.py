@@ -120,7 +120,9 @@ class StackedFederation:
     needed on the gather path; ``mask`` is provided for consumers that
     reduce over the sample axis directly.
     """
-    x: np.ndarray            # (K, n_max, d) float32, zero-padded
+    x: np.ndarray            # (K, n_max, ...) feature dtype, zero-padded —
+                             # float32 features for the MLP federation,
+                             # int32 token rows for transformer clients
     y: np.ndarray            # (K, n_max) int32, zero-padded
     n_samples: np.ndarray    # (K,) int64 true per-client sizes
     mask: np.ndarray         # (K, n_max) float32, 1.0 on real rows
@@ -131,13 +133,18 @@ class StackedFederation:
 
 
 def stack_federation(fed: List[ClientData]) -> StackedFederation:
-    """Pad+stack per-client (ragged) datasets into (K, n_max, ...) arrays."""
+    """Pad+stack per-client (ragged) datasets into (K, n_max, ...) arrays.
+
+    The feature dtype and trailing shape follow the clients' ``x`` (float
+    feature vectors, int token sequences, ... — float64 narrows to the
+    device float32); labels stack as int32."""
     if not fed:
         raise ValueError("empty federation")
     sizes = np.array([len(c) for c in fed], dtype=np.int64)
     n_max = int(sizes.max())
-    d_feat = fed[0].x.shape[1]
-    x = np.zeros((len(fed), n_max, d_feat), np.float32)
+    x0 = np.asarray(fed[0].x)
+    x_dtype = np.float32 if np.issubdtype(x0.dtype, np.floating) else x0.dtype
+    x = np.zeros((len(fed), n_max) + x0.shape[1:], x_dtype)
     y = np.zeros((len(fed), n_max), np.int32)
     mask = np.zeros((len(fed), n_max), np.float32)
     for k, c in enumerate(fed):

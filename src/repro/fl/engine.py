@@ -122,22 +122,36 @@ class BatchedEngine:
                    local_steps=c0.local_steps)
 
     # ------------------------------------------------------------------
+    def _train_one(self, params, xc, yc, plan):
+        """One client's M local SGD steps from the broadcast ``params``
+        pytree; returns the trained params pytree (no ravel)."""
+        def step(p, sel):
+            batch = {"x": xc[sel], "y": yc[sel]}
+            g = jax.grad(self.loss_fn)(p, batch)
+            return jax.tree_util.tree_map(
+                lambda pp, gg: pp - self.lr * gg, p, g), None
+        # M is small (a handful of local steps): full unroll lets XLA
+        # fuse across steps instead of paying while-loop overhead
+        p, _ = jax.lax.scan(step, params, plan, unroll=True)
+        return p
+
     def _train_all(self, params, x, y, idx):
         """params: pytree of (…) broadcast to every client; x/y: padded
         (K, n_max, …) data; idx: (K, M, B) minibatch plans. Returns
         (K, d) raveled trained models."""
         def one_client(xc, yc, plan):
-            def step(p, sel):
-                batch = {"x": xc[sel], "y": yc[sel]}
-                g = jax.grad(self.loss_fn)(p, batch)
-                return jax.tree_util.tree_map(
-                    lambda pp, gg: pp - self.lr * gg, p, g), None
-            # M is small (a handful of local steps): full unroll lets XLA
-            # fuse across steps instead of paying while-loop overhead
-            p, _ = jax.lax.scan(step, params, plan, unroll=True)
-            return ravel_pytree(p)[0]
+            return ravel_pytree(self._train_one(params, xc, yc, plan))[0]
 
         return jax.vmap(one_client)(x, y, idx)
+
+    def _train_all_tree(self, params, x, y, idx):
+        """Pytree twin of ``_train_all``: same local SGD, but the trained
+        models come back as a client-stacked params pytree ((K, ...)
+        leaves) instead of a raveled (K, d) matrix — the form the
+        pytree-native round core carries (repro.fl.runtime)."""
+        return jax.vmap(
+            lambda xc, yc, plan: self._train_one(params, xc, yc, plan)
+        )(x, y, idx)
 
     def enable_counter_plan(self, key) -> None:
         """Switch minibatch planning to the stateless counter scheme: the
@@ -157,22 +171,41 @@ class BatchedEngine:
         return counter_batch_plan(key, n, self.local_steps,
                                   self.batch_size, client_ids=client_ids)
 
-    def local_train(self, params, ids: Sequence[int],
-                    round_idx=None) -> np.ndarray:
-        ids = np.asarray(ids, np.int64)
+    def _broadcast_plans(self, ids, round_idx):
+        """(K, M, B) index plans for a broadcast of ``ids``: the full
+        counter plan in counter mode, host epoch-cursor plans (zeros for
+        non-broadcast rows) otherwise."""
         if self.plan == "counter":
             if round_idx is None:
                 raise ValueError("counter-plan engine needs the broadcast "
                                  "round index")
-            idx = self.round_plan(int(round_idx))
-        else:
-            self._idx[:] = 0
-            for k in ids:
-                self._idx[k] = np.stack(list(
-                    self.fed[k].batch_indices(self.batch_size,
-                                              self.local_steps)))
-            idx = jnp.asarray(self._idx)
-        flat = self._train(params, self._x, self._y, idx)
+            return self.round_plan(int(round_idx))
+        self._idx[:] = 0
+        for k in ids:
+            self._idx[k] = np.stack(list(
+                self.fed[k].batch_indices(self.batch_size,
+                                          self.local_steps)))
+        return jnp.asarray(self._idx)
+
+    def local_train_full(self, params, ids: Sequence[int],
+                         round_idx=None) -> jnp.ndarray:
+        """Device-resident full-federation training: the whole (K, d)
+        trained stack stays on device with FIXED shapes — the host PAOTA
+        server masks out the non-broadcast rows itself instead of
+        gathering ``ids`` (a varying-length gather/scatter re-lowered a
+        fresh XLA program for every distinct participation count, and the
+        numpy round-trip was the measured host-reference ceiling at
+        K ~ 10^4). Rows outside ``ids`` are untrained garbage (zero index
+        plans / unconsumed counter rows) and MUST be masked by the
+        caller."""
+        ids = np.asarray(ids, np.int64)
+        idx = self._broadcast_plans(ids, round_idx)
+        return self._train(params, self._x, self._y, idx)
+
+    def local_train(self, params, ids: Sequence[int],
+                    round_idx=None) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        flat = self.local_train_full(params, ids, round_idx=round_idx)
         # subset on device: only the requested rows cross to host
         return np.asarray(flat[jnp.asarray(ids)])
 

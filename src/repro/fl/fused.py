@@ -58,10 +58,25 @@ class FusedPAOTA:
     random trajectory statistically, never silently mid-run. The host
     server must be EXPLICITLY put in counter mode to serve as this
     driver's draw-identical reference.
+
+    ``params_mode``: ``"raveled"`` (default) carries the model as the
+    historical flat (d,) vector / (K, d) stack — bit-identical to every
+    prior release; ``"pytree"`` carries the params pytree natively (the
+    round core is tree-generic, repro.fl.runtime), which is what lets the
+    sharded driver place transformer/MoE client leaves on real meshes.
+    The two modes consume identical RNG draws (one flat AWGN realization
+    split across leaves) and agree allclose round for round — float
+    reduction regrouping across leaves is the only difference
+    (tests/test_pytree_round.py).
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
-                 sched_cfg: SchedulerConfig, cfg: PAOTAConfig):
+                 sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
+                 params_mode: str = "raveled"):
+        if params_mode not in ("raveled", "pytree"):
+            raise ValueError(f"params_mode={params_mode!r} (expected "
+                             "'raveled' or 'pytree')")
+        self.params_mode = params_mode
         if cfg.use_kernel:
             raise ValueError("use_kernel routes through the host-path "
                              "server; the fused round is already one fused "
@@ -80,6 +95,11 @@ class FusedPAOTA:
         self.cfg = cfg
         vec, self.unravel = ravel(init_params)
         self._init_vec = jnp.asarray(vec, jnp.float32)
+        if params_mode == "pytree":
+            self._init_global = jax.tree_util.tree_map(jnp.asarray,
+                                                       init_params)
+        else:
+            self._init_global = self._init_vec
         self.d = int(vec.size)
         self.k = engine.n_clients
         c1, c0 = p2_constants(cfg.smooth_l, cfg.eps_bound, self.k, self.d,
@@ -102,11 +122,16 @@ class FusedPAOTA:
     # ------------------------------------------------------------------
     # jitted pieces
     # ------------------------------------------------------------------
-    def _local_train_all(self, global_vec, x, y, broadcast_round):
-        """All K clients run M local SGD steps from `global_vec` with the
-        counter minibatch plan of `broadcast_round`. (K, d) raveled."""
+    def _local_train_all(self, global_state, x, y, broadcast_round):
+        """All K clients run M local SGD steps from the current global
+        model with the counter minibatch plan of `broadcast_round`.
+        Raveled mode: (d,) vector in, (K, d) stack out; pytree mode: the
+        params tree in, client-stacked tree out (same SGD ops — ravel is
+        the only difference)."""
         idx = self.engine.round_plan(broadcast_round)
-        params = self.unravel(global_vec)
+        if self.params_mode == "pytree":
+            return self.engine._train_all_tree(global_state, x, y, idx)
+        params = self.unravel(global_state)
         return self.engine._train_all(params, x, y, idx)
 
     def _streams(self) -> RoundStreams:
@@ -135,19 +160,24 @@ class FusedPAOTA:
     # ------------------------------------------------------------------
     @property
     def global_vec(self) -> np.ndarray:
+        """Raveled view of w_g^t (np) — pytree-mode globals ravel on
+        demand in the params' tree_flatten order, so the two modes are
+        directly comparable."""
         carry = self._carry
-        vec = self._init_vec if carry is None else carry.global_vec
-        return np.asarray(vec)
+        g = self._init_global if carry is None else carry.global_vec
+        if self.params_mode == "pytree":
+            g = ravel(g)[0]
+        return np.asarray(g)
 
     def global_params(self):
-        vec = self._init_vec if self._carry is None else self._carry.global_vec
-        return self.unravel(vec)
+        g = self._init_global if self._carry is None else self._carry.global_vec
+        return g if self.params_mode == "pytree" else self.unravel(g)
 
     def advance(self, n_rounds: int) -> List[dict]:
         """Run ``n_rounds`` PAOTA rounds in ONE lax.scan device call;
         appends and returns the per-round history dicts."""
         if self._carry is None:
-            self._carry = self._jit_init(self._init_vec, self.engine._x,
+            self._carry = self._jit_init(self._init_global, self.engine._x,
                                          self.engine._y)
         self._carry, outs = self._jit_scan(self._carry, self.engine._x,
                                            self.engine._y, n_rounds=n_rounds)

@@ -1,6 +1,16 @@
 """Functional PAOTA round core — ONE implementation of the aggregation
 period, shared by every driver.
 
+The federated model is an arbitrary params PYTREE: every model-sized
+quantity (globals, pending local models, deltas) is carried leaf-wise,
+and every cross-model scalar (per-client norms and cosines, the AirComp
+superposition, varsigma) is computed as a tree-reduced sum — per-leaf
+partials accumulated locally, then reduced ONCE (one psum per round under
+sharding, never one per leaf). The raveled federation is the trivial
+single-(K, d)-leaf pytree and executes the historical op sequence
+bit-for-bit; ``waterfill_beta_jnp`` / ``power_from_beta`` stay
+shape-agnostic consumers of the reduced (K,) scalars.
+
 ``paota_round_step`` is the pure round transition (``RoundCarry`` in,
 ``RoundCarry`` out): scheduler advance -> eq.-25 factors -> water-filling
 P2 -> channel + instantaneous cap (7) -> AirComp -> zero-uploader-guarded
@@ -40,7 +50,8 @@ from repro.core.aggregation import (guarded_global_update,
                                     paota_aggregate_stacked)
 from repro.core.aircomp import VARSIGMA_MIN, effective_power_cap
 from repro.core.boxqp import waterfill_beta_jnp
-from repro.core.power_control import (cosine_similarity, power_from_beta,
+from repro.core.power_control import (client_sq_norms, cosine_similarity,
+                                      global_sq_norm, power_from_beta,
                                       similarity_factor, staleness_factor)
 from repro.core.scheduler import sched_advance, sched_broadcast
 
@@ -48,19 +59,28 @@ from repro.core.scheduler import sched_advance, sched_broadcast
 class RoundCarry(NamedTuple):
     """Device-resident PAOTA state threaded through the scan.
 
-    Under the sharded driver the ``(K,)``/``(K, d)`` fields are laid over
-    the mesh client axis (each shard carries its K/n rows); the scalars and
-    ``(d,)`` globals are replicated.
+    The federated model is an arbitrary params PYTREE: ``global_vec`` /
+    ``prev_global`` hold one copy of the model (leaves of the params'
+    natural shapes), ``pending`` / ``starts`` hold the client-stacked form
+    (every leaf with a leading K axis). The raveled federation is the
+    trivial single-leaf instance — a bare (d,) vector / (K, d) matrix —
+    and executes the exact historical op sequence (a jnp array IS a
+    one-leaf pytree, so nothing special-cases it).
+
+    Under the sharded driver the ``(K,)`` fields and the leading axis of
+    every stacked leaf are laid over the mesh client axis (each shard
+    carries its K/n rows); the scalars and the global-model leaves are
+    replicated.
     """
     t: jnp.ndarray            # i32 — scheduler round counter
     time: jnp.ndarray         # f32 — simulated clock (seconds)
     ready: jnp.ndarray        # (K,) bool — b_k at the aggregation slot
     busy_until: jnp.ndarray   # (K,) f32 — local-training completion times
     model_round: jnp.ndarray  # (K,) i32 — round each client trains on
-    global_vec: jnp.ndarray   # (d,) — w_g^t
-    prev_global: jnp.ndarray  # (d,) — w_g^{t-1} (similarity direction)
-    pending: jnp.ndarray      # (K, d) — in-flight trained local models
-    starts: jnp.ndarray       # (K, d) — the global each was trained from
+    global_vec: jnp.ndarray   # params pytree / (d,) — w_g^t
+    prev_global: jnp.ndarray  # params pytree / (d,) — w_g^{t-1} (direction)
+    pending: jnp.ndarray      # (K, ...)-leaf pytree — in-flight local models
+    starts: jnp.ndarray       # (K, ...)-leaf pytree — global each trained from
 
 
 class RoundCfg(NamedTuple):
@@ -81,7 +101,9 @@ class RoundStreams(NamedTuple):
     shard_map); under sharding each returns this shard's rows of the SAME
     global draws the single-device form makes, so trajectories agree.
     """
-    local_train: Callable     # (global_vec, x, y, round) -> (K_local, d)
+    local_train: Callable     # (global tree, x, y, round) -> stacked tree
+                              # of (K_local, ...) leaves ((K_local, d) for
+                              # the raveled single-leaf federation)
     latencies: Callable       # (round) -> (K_local,) latency draws
     channel: Callable         # (round) -> (K_local,) |h_k| draws
     noise_key: Callable       # (round) -> AWGN key (replicated)
@@ -94,14 +116,16 @@ class RoundStreams(NamedTuple):
 def eq25_factors(pending, starts, global_vec, prev_global, stal, omega,
                  use_kernel: bool = False):
     """Stage 2 of the round — eq. 25 inputs: local-update deltas, staleness
-    factors rho_k, gradient-similarity factors theta_k. Pure jnp; per-client
-    along the leading axis, so it is shard-local under the client mesh axis
-    (the cosine reduction runs over d, which every shard holds whole).
+    factors rho_k, gradient-similarity factors theta_k. Pure jnp over
+    params pytrees (raveled = single leaf); per-client along the leading
+    axis, so it is shard-local under the client mesh axis (the cosine and
+    norm reductions run over the model dims, which every shard holds whole
+    — per-leaf partials accumulate locally, no collective).
 
-    Returns (deltas, rho, theta)."""
-    deltas = pending - starts
-    gdir = global_vec - prev_global
-    gnorm = jnp.sqrt(jnp.sum(gdir * gdir))
+    Returns (deltas pytree, rho, theta)."""
+    deltas = jax.tree_util.tree_map(jnp.subtract, pending, starts)
+    gdir = jax.tree_util.tree_map(jnp.subtract, global_vec, prev_global)
+    gnorm = jnp.sqrt(global_sq_norm(gdir))
     cos = jnp.where(gnorm < 1e-12, 0.0,
                     cosine_similarity(deltas, gdir, use_kernel=use_kernel))
     theta = similarity_factor(cos)
@@ -111,9 +135,10 @@ def eq25_factors(pending, starts, global_vec, prev_global, stal, omega,
 
 def constraint7_powers(powers, payload, h, p_max):
     """Stage 4 — instantaneous power constraint (7) under the sampled
-    channel: p_k <- min(p_k, |h_k| sqrt(P_max / ||w_k||^2)). Per-client,
-    shard-local."""
-    w_norm2 = jnp.sum(payload * payload, axis=1)
+    channel: p_k <- min(p_k, |h_k| sqrt(P_max / ||w_k||^2)), with
+    ||w_k||^2 tree-reduced over every leaf of the payload pytree.
+    Per-client, shard-local."""
+    w_norm2 = client_sq_norms(payload)
     return jnp.minimum(powers, effective_power_cap(w_norm2, h, p_max))
 
 
@@ -186,8 +211,15 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     n_ready, n_busy, n_model = sched_broadcast(
         ready, carry.busy_until, carry.model_round, ready, time, lat, t_next)
     trained = streams.local_train(new_global, x, y, t_next)
-    pending = jnp.where(ready[:, None], trained, carry.pending)
-    starts = jnp.where(ready[:, None], new_global[None, :], carry.starts)
+
+    def row_select(new, old):
+        m = ready.reshape((k_local,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    pending = jax.tree_util.tree_map(row_select, trained, carry.pending)
+    starts = jax.tree_util.tree_map(
+        lambda g, s: row_select(jnp.broadcast_to(g[None], s.shape), s),
+        new_global, carry.starts)
 
     n_upl = ksum(b)
     denom = jnp.maximum(n_upl, 1.0)
@@ -211,10 +243,11 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
 
 def init_round_carry(vec, x, y, *, streams: RoundStreams) -> RoundCarry:
     """Round-0 kick-off: broadcast w_g^0 to everyone and precompute their
-    local training (mirrors ``PAOTAServer.__init__``). Shapes follow the
-    streams' view of the federation (all K single-device; K/n per shard)."""
+    local training (mirrors ``PAOTAServer.__init__``). ``vec`` is the
+    params pytree (raveled = single (d,) leaf); shapes follow the streams'
+    view of the federation (all K single-device; K/n per shard)."""
     pending = streams.local_train(vec, x, y, 0)
-    k_local = pending.shape[0]
+    k_local = jax.tree_util.tree_leaves(pending)[0].shape[0]
     return RoundCarry(
         t=jnp.int32(0),
         time=jnp.float32(0.0),
@@ -224,7 +257,8 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams) -> RoundCarry:
         global_vec=vec,
         prev_global=vec,
         pending=pending,
-        starts=jnp.broadcast_to(vec, (k_local, vec.shape[0])),
+        starts=jax.tree_util.tree_map(
+            lambda g: jnp.broadcast_to(g[None], (k_local,) + g.shape), vec),
     )
 
 

@@ -16,8 +16,12 @@ global model and its previous-direction are held unchanged and the history
 records varsigma = 0.0 — aggregating would divide pure channel noise by the
 ~0 normalizer (see repro.core.aggregation.guarded_global_update).
 
-This class is the host reference: one device round-trip per stage. The
-fully fused, single-device-call form of the same round lives in
+This class is the host reference: host-Python control flow per stage,
+with the model-sized (K, d) state device-resident and the two stage
+pipelines jitted once (the host<->device copies and per-round XLA
+re-lowerings — not the math — were the reference's scale ceiling; see
+EXPERIMENTS.md §Pytree round core). The fully fused,
+single-device-call form of the same round lives in
 ``repro.fl.fused.FusedPAOTA``; with ``PAOTAConfig(rng="counter",
 solver="waterfill_jnp")`` and ``SchedulerConfig(rng="counter")`` this
 server consumes the exact RNG streams the fused scan does and serves as
@@ -90,37 +94,97 @@ class PAOTAServer:
                                  "rng='counter') so latency draws match")
             self.engine.enable_counter_plan(jax.random.PRNGKey(cfg.seed))
         self.scheduler = SemiAsyncScheduler(sched_cfg)
+        # concrete Python floats, resolved OUTSIDE any jit trace (the
+        # ChannelConfig.sigma_n property calls float(jnp.sqrt(...)))
+        self._sigma_n = chan.sigma_n
         vec, self.unravel = ravel(init_params)
-        self.global_vec = np.asarray(vec)
-        self.prev_global = self.global_vec.copy()
-        self.d = len(self.global_vec)
+        # model-sized state is DEVICE-resident (jnp): the (K, d) pending
+        # stacks and the globals used to round-trip through numpy every
+        # round, and those host<->device copies — not the math — were the
+        # host reference's scale ceiling (~1.2 s/round of np.asarray at
+        # K = 4000). Host-facing reads go through the np properties below.
+        self._global = jnp.asarray(vec, jnp.float32)
+        self._prev = self._global
+        self.d = int(self._global.shape[0])
         self.key = jax.random.PRNGKey(cfg.seed)
         k_tot = self.engine.n_clients
         # in-flight local results: trained model + the global it started from
-        self._pending_models = np.tile(self.global_vec, (k_tot, 1))
-        self._pending_starts = np.tile(self.global_vec, (k_tot, 1))
+        self._pending_models = jnp.tile(self._global, (k_tot, 1))
+        self._pending_starts = jnp.tile(self._global, (k_tot, 1))
+        # the two device stage pipelines, jitted ONCE per server: eager
+        # per-round dispatch re-lowered ~10 programs and multi-passed the
+        # (K, d) operands every round — the other half of the host-path
+        # scale ceiling. The jitted bodies call the exact shared stage
+        # helpers, so this changes scheduling, never math.
+        self._jit_eq25 = jax.jit(eq25_factors,
+                                 static_argnames=("omega", "use_kernel"))
+        self._jit_finish = jax.jit(self._finish_round)
         self._kick_off(np.arange(k_tot))
         self.history: List[dict] = []
 
     # ------------------------------------------------------------------
+    @property
+    def global_vec(self) -> np.ndarray:
+        """w_g^t as a host numpy vector (the historical attribute)."""
+        return np.asarray(self._global)
+
+    @property
+    def prev_global(self) -> np.ndarray:
+        """w_g^{t-1} as a host numpy vector."""
+        return np.asarray(self._prev)
+
     def _kick_off(self, ids):
         """Broadcast current global model to `ids`; precompute their local
         training result (deterministic — consumed when their latency ends).
-        One fused device call under the batched engine."""
+        One fused device call under the batched engine; the trained rows
+        stay on device when the engine supports it."""
         ids = np.asarray(ids, dtype=np.int64)
-        start = self.global_vec.copy()
+        start = self._global
         broadcast_round = self.scheduler.round   # the round `ids` train on
         self.scheduler.start_round(ids)
         if ids.size == 0:
             return
-        params = self.unravel(jnp.asarray(start))
-        trained = self.engine.local_train(params, ids,
-                                          round_idx=broadcast_round)
-        self._pending_models[ids] = trained
-        self._pending_starts[ids] = start
+        params = self.unravel(start)
+        if hasattr(self.engine, "local_train_full"):
+            # fixed-shape path: full (K, d) stack on device, broadcast rows
+            # selected by a host-built mask (a varying-length gather /
+            # scatter would re-lower one XLA program per participation
+            # count)
+            flat = self.engine.local_train_full(params, ids,
+                                                round_idx=broadcast_round)
+            m = np.zeros(self.engine.n_clients, bool)
+            m[ids] = True
+            sel = jnp.asarray(m)[:, None]
+            self._pending_models = jnp.where(
+                sel, flat.astype(self._pending_models.dtype),
+                self._pending_models)
+            self._pending_starts = jnp.where(sel, start[None, :],
+                                             self._pending_starts)
+        else:
+            trained = jnp.asarray(self.engine.local_train(
+                params, ids, round_idx=broadcast_round))
+            idx = jnp.asarray(ids)
+            self._pending_models = self._pending_models.at[idx].set(
+                trained.astype(self._pending_models.dtype))
+            self._pending_starts = self._pending_starts.at[idx].set(start)
 
     def global_params(self):
-        return self.unravel(jnp.asarray(self.global_vec))
+        return self.unravel(self._global)
+
+    def _finish_round(self, payload, powers, b, h, noise_key, global_vec,
+                      prev_global):
+        """Jitted tail of the round: constraint-(7) cap -> AirComp ->
+        guarded global update, via the same shared stage helpers the
+        fused/sharded core runs. Returns (new_global, new_prev, varsigma)."""
+        powers = constraint7_powers(powers, payload, h,
+                                    self.chan.p_max_watts)
+        agg, varsigma = paota_aggregate_stacked(
+            payload, powers, b, noise_key, self._sigma_n,
+            use_kernel=self.cfg.use_kernel)
+        new_global, new_prev = guarded_global_update(
+            global_vec, prev_global, agg, varsigma,
+            delta=self.cfg.transmit == "delta")
+        return new_global, new_prev, varsigma
 
     def _round_key(self, round_idx: int, tag: int):
         """Per-consumer subkey: counter mode derives it from (round, tag)
@@ -160,13 +224,13 @@ class PAOTAServer:
 
         # staleness + similarity factors (eq. 25) — the SAME stage helper
         # the fused/sharded round core runs (repro.fl.runtime), so the host
-        # reference cannot drift from the on-device implementations
-        deltas, rho, theta = eq25_factors(
-            jnp.asarray(stacked), jnp.asarray(self._pending_starts),
-            jnp.asarray(self.global_vec), jnp.asarray(self.prev_global),
-            jnp.asarray(stal, jnp.float32), self.cfg.omega,
+        # reference cannot drift from the on-device implementations. The
+        # (K, d) operands are already device-resident; only the (K,)
+        # factors cross to host for the numpy P2 problem builder.
+        deltas, rho, theta = self._jit_eq25(
+            stacked, self._pending_starts, self._global, self._prev,
+            jnp.asarray(stal, jnp.float32), omega=self.cfg.omega,
             use_kernel=self.cfg.use_kernel)
-        deltas = np.asarray(deltas)
         rho, theta = np.asarray(rho, float), np.asarray(theta, float)
 
         # P2 -> beta -> powers
@@ -180,26 +244,17 @@ class PAOTAServer:
         # payload: full models (paper, eq. 6) or local updates (beyond-paper)
         payload = deltas if self.cfg.transmit == "delta" else stacked
 
-        # instantaneous power constraint (7) under the sampled channel —
-        # shared stage helper (repro.fl.runtime.constraint7_powers)
-        sub = self._round_key(r, TAG_CHANNEL)
-        h = sample_channel_gains(sub, k_tot, self.chan)
-        powers = np.asarray(constraint7_powers(jnp.asarray(powers, jnp.float32),
-                                               jnp.asarray(payload), h,
-                                               self.chan.p_max_watts))
-
-        # AirComp aggregation (eqs. 6+8) with the degenerate-normalizer
-        # guard: if the capped powers somehow sum to ~0, hold the global
-        # rather than assign amplified noise (same select as the fused path)
-        sub = self._round_key(r, TAG_NOISE)
-        agg, varsigma = paota_aggregate_stacked(
-            jnp.asarray(payload), jnp.asarray(powers), jnp.asarray(b), sub,
-            self.chan.sigma_n, use_kernel=self.cfg.use_kernel)
-        new_global, new_prev = guarded_global_update(
-            jnp.asarray(self.global_vec), jnp.asarray(self.prev_global),
-            agg, varsigma, delta=self.cfg.transmit == "delta")
-        self.prev_global = np.asarray(new_prev)
-        self.global_vec = np.asarray(new_global)
+        # instantaneous power constraint (7) under the sampled channel,
+        # AirComp aggregation (eqs. 6+8), and the degenerate-normalizer
+        # guard (if the capped powers somehow sum to ~0, hold the global
+        # rather than assign amplified noise — same select as the fused
+        # path): one jitted device call over the shared stage helpers
+        h = sample_channel_gains(self._round_key(r, TAG_CHANNEL), k_tot,
+                                 self.chan)
+        self._global, self._prev, varsigma = self._jit_finish(
+            payload, jnp.asarray(powers, jnp.float32),
+            jnp.asarray(b, jnp.float32), h, self._round_key(r, TAG_NOISE),
+            self._global, self._prev)
 
         # uploaders receive the new model and restart (Fig. 2 workflow)
         self._kick_off(upl)

@@ -4,28 +4,47 @@ over the mesh client axis.
 ``FusedPAOTA`` runs the whole aggregation period as one device call — but
 on ONE device: a K = 10^4..10^5 federation serializes through a single
 chip while the rest of the mesh idles. ``ShardedPAOTA`` lays the round
-core's (K,) / (K, d) carry rows and the engine's padded (K, n_max, ...)
+core's (K,) / (K, ...) carry rows and the engine's padded (K, n_max, ...)
 federation over the mesh client axis (``repro.launch.mesh.data_axes`` /
-``client_axes_for``; specs from ``repro.sharding.rules.batch_specs``) and
-runs the SAME ``repro.fl.runtime`` scan inside ``shard_map``:
+``client_axes_for``; specs from ``repro.sharding.rules``) and runs the
+SAME ``repro.fl.runtime`` scan inside ``shard_map``:
 
 * per-client stages — local SGD (vmap over this shard's clients),
   latency/scheduler state, channel draw, eq.-25 factors, power cap (7) —
   are embarrassingly parallel: zero collectives;
 * the AirComp superposition is ONE psum over the client axis per round
-  (``repro.kernels.aircomp_sum.aircomp_sum_psum`` — the TPU-native
-  realization of the wireless MAC), plus the water-filling P2 grid
-  reductions and the round metrics (a handful of scalar psums).
+  (``repro.kernels.aircomp_sum``: the raveled form psums the flat
+  accumulator, the pytree form concatenates per-leaf partials and psums
+  once — never per leaf), plus the water-filling P2 grid reductions and
+  the round metrics (a handful of scalar psums).
+
+Params modes (``params_mode``): ``"raveled"`` federates the flat (K, d)
+stack exactly as before; ``"pytree"`` carries the params pytree natively,
+each client-stacked leaf placed by ``repro.sharding.rules
+.stack_client_specs`` under the mesh client axes — so a transformer-config
+client federation (e.g. a minicpm-class reduced config) runs full sharded
+PAOTA rounds with its params in their natural structure. Intra-client
+sharding of the trailing (model) dims is not yet wired into the round's
+tree reductions, so pytree mode requires every non-client mesh axis to
+have extent 1 (the flattened-client layout of DESIGN.md §4).
+
+Phantom-client padding: a client-axis extent that does not divide K no
+longer refuses — the federation pads to the next multiple with masked
+phantom clients whose ready bits are pinned False forever (busy_until =
++inf, zero data rows, zero power). Phantoms never upload, never
+broadcast, and carry b_k = 0 through every psum and metric, so the padded
+trajectory equals the unpadded single-device one draw for draw
+(tests/test_pytree_round.py).
 
 Equivalence contract: every shard consumes its rows of the SAME global
 counter-RNG draws the single-device scan makes — latency and channel
-vectors are drawn full-K from the replicated round key and sliced by
-shard offset; minibatch plans fold in GLOBAL client ids
-(``counter_batch_plan(client_ids=...)``); the AWGN realization is drawn
-once from the replicated noise key. The sharded trajectory is therefore
-allclose to ``FusedPAOTA`` round for round (float reduction order across
-shards is the only difference; zero-uploader periods hold w_g
-bit-identically on every shard) — tests/test_sharded_round.py.
+vectors are drawn full-K from the replicated round key, padded with
+phantom fill, and sliced by shard offset; minibatch plans fold in GLOBAL
+client ids (``counter_batch_plan(client_ids=...)``); the AWGN realization
+is drawn once from the replicated noise key. The sharded trajectory is
+therefore allclose to ``FusedPAOTA`` round for round (float reduction
+order across shards is the only difference; zero-uploader periods hold
+w_g bit-identically on every shard) — tests/test_sharded_round.py.
 """
 from __future__ import annotations
 
@@ -48,7 +67,7 @@ from repro.fl.fused import FusedPAOTA
 from repro.fl.runtime import RoundCarry, RoundStreams, scan_rounds
 from repro.fl.server import PAOTAConfig
 from repro.launch.mesh import data_axes
-from repro.sharding.rules import batch_specs
+from repro.sharding.rules import batch_specs, stack_client_specs
 
 OUT_KEYS = ("n_participants", "time", "mean_staleness", "beta_mean",
             "varsigma", "p2_objective")
@@ -62,13 +81,21 @@ class ShardedPAOTA(FusedPAOTA):
     (``repro.launch.mesh.make_client_mesh``); ``client_axes`` defaults to
     the mesh's ("pod",)/"data" axes (``data_axes``) — pass
     ``client_axes_for(model_cfg, mesh)`` to follow an architecture's
-    placement policy. The client-axis extent must divide K (no client
-    padding: a fractional shard would silently skew the AirComp psum).
+    placement policy. A client-axis extent that does not divide K pads
+    the federation with masked phantom clients (never ready, zero power)
+    rather than refusing.
+
+    ``params_mode="pytree"`` + ``model_cfg``: carry the params pytree
+    natively with each stacked leaf placed by ``stack_client_specs(...,
+    model_cfg, mesh, client_axes)`` (``model_cfg=None`` places leading
+    client axes only — the right policy for structureless pytrees like
+    the MLP).
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
-                 mesh=None, client_axes=None):
+                 mesh=None, client_axes=None, params_mode: str = "raveled",
+                 model_cfg=None):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -78,21 +105,59 @@ class ShardedPAOTA(FusedPAOTA):
             raise ValueError(f"mesh {mesh.axis_names} has no client axis")
         self.client_axes = axes
         self.n_shards = int(math.prod(mesh.shape[a] for a in axes))
+        if params_mode == "pytree":
+            other = {a: mesh.shape[a] for a in mesh.axis_names
+                     if a not in axes and mesh.shape[a] > 1}
+            if other:
+                raise NotImplementedError(
+                    f"params_mode='pytree' shards clients only; non-client "
+                    f"mesh axes {other} would split the leaves' model dims, "
+                    f"and the round's tree reductions do not yet psum over "
+                    f"them (intra-client TP is the multi-pod follow-on — "
+                    f"see ROADMAP)")
         # super() builds the engine, RoundCfg, keys, and jits _run_scan —
         # which the overrides below turn into the shard_map program
-        super().__init__(init_params, clients, chan, sched_cfg, cfg)
-        if self.k % self.n_shards:
-            raise ValueError(
-                f"client-axis extent {self.n_shards} must divide K="
-                f"{self.k} clients (mesh {dict(mesh.shape)}, client axes "
-                f"{axes}); pad or regroup the federation")
-        self.k_local = self.k // self.n_shards
+        super().__init__(init_params, clients, chan, sched_cfg, cfg,
+                         params_mode=params_mode)
+        # phantom-client padding: pad K to the next multiple of the
+        # client-axis extent with masked never-ready clients
+        self.k_pad = -(-self.k // self.n_shards) * self.n_shards
+        self.n_phantom = self.k_pad - self.k
+        self.k_local = self.k_pad // self.n_shards
+        if self.n_phantom:
+            ph = self.n_phantom
+            eng = self.engine
+            pad0 = lambda a: jnp.concatenate(
+                [jnp.asarray(a),
+                 jnp.zeros((ph,) + a.shape[1:], a.dtype)])
+            eng._x, eng._y = pad0(eng._x), pad0(eng._y)
+            # phantom "datasets" are one zero row: minibatch plans draw
+            # index 0 only, the trained output rows are never consumed
+            # (ready stays False so pending never takes them)
+            eng._n_dev = jnp.concatenate(
+                [eng._n_dev, jnp.ones((ph,), eng._n_dev.dtype)])
         ax = axes if len(axes) != 1 else axes[0]
         self._ax = ax
+        if params_mode == "pytree":
+            stacked_struct = jax.tree_util.tree_map(
+                lambda g: jax.ShapeDtypeStruct((self.k_pad,) + g.shape,
+                                               g.dtype), self._init_global)
+            pend_spec = stack_client_specs(stacked_struct, model_cfg, mesh,
+                                           axes)
+            # every non-client axis is extent 1 (guard above), so dropping
+            # its trailing assignments changes nothing physically — but it
+            # lets shard_map's replication checker see that the psum over
+            # the client axes fully replicates the globals
+            pend_spec = jax.tree_util.tree_map(
+                lambda s: self._client_axes_only(s, axes), pend_spec)
+            glob_spec = jax.tree_util.tree_map(lambda _: P(),
+                                               self._init_global)
+        else:
+            pend_spec, glob_spec = P(ax, None), P()
         self._carry_specs = RoundCarry(
             t=P(), time=P(), ready=P(ax), busy_until=P(ax),
-            model_round=P(ax), global_vec=P(), prev_global=P(),
-            pending=P(ax, None), starts=P(ax, None))
+            model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
+            pending=pend_spec, starts=pend_spec)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
@@ -103,6 +168,41 @@ class ShardedPAOTA(FusedPAOTA):
             self.engine._x, NamedSharding(mesh, self._x_spec))
         self.engine._y = jax.device_put(
             self.engine._y, NamedSharding(mesh, self._y_spec))
+
+    @staticmethod
+    def _client_axes_only(spec, axes):
+        """Strip mesh axes outside ``axes`` from a PartitionSpec (all such
+        axes are extent 1 in pytree mode — see the constructor guard)."""
+        def keep(entry):
+            if entry is None:
+                return None
+            if isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a in axes)
+                return kept if kept else None
+            return entry if entry in axes else None
+        return P(*(keep(e) for e in spec))
+
+    # ------------------------------------------------------------------
+    # phantom-aware full-federation streams (round-0 init runs these on
+    # the placed data before the scan takes over): real clients see the
+    # exact unpadded draws, phantoms get busy_until = +inf so sched_advance
+    # can never flip their ready bit
+    # ------------------------------------------------------------------
+    def _streams(self) -> RoundStreams:
+        base = super()._streams()
+        if not self.n_phantom:
+            return base
+
+        def pad_fill(v, fill):
+            return jnp.concatenate(
+                [v, jnp.full((self.n_phantom,), fill, v.dtype)])
+
+        return RoundStreams(
+            local_train=base.local_train,   # engine arrays already padded
+            latencies=lambda r: pad_fill(base.latencies(r), jnp.inf),
+            channel=lambda t: pad_fill(base.channel(t), 0.0),
+            noise_key=base.noise_key,
+        )
 
     # ------------------------------------------------------------------
     # shard-local streams: identical global draws, this shard's rows
@@ -116,26 +216,38 @@ class ShardedPAOTA(FusedPAOTA):
         return idx * self.k_local
 
     def _shard_streams(self, offset) -> RoundStreams:
-        k, k_loc = self.k, self.k_local
+        k, k_loc, ph = self.k, self.k_local, self.n_phantom
         sc, chan = self.sched_cfg, self.chan
-        n_dev = self.engine._n_dev          # (K,) consts: replicated, tiny
+        n_dev = self.engine._n_dev          # (K_pad,) consts: replicated
 
         def slice_k(full):
             return jax.lax.dynamic_slice(full, (offset,), (k_loc,))
 
-        def local_train(global_vec, x, y, r):
+        def pad_slice(full, fill):
+            """Slice this shard's rows out of a full-K draw vector, padded
+            to K_pad with the phantom fill first — a shard that straddles
+            the real/phantom boundary must not clamp into real rows."""
+            if ph:
+                full = jnp.concatenate(
+                    [full, jnp.full((ph,), fill, full.dtype)])
+            return slice_k(full)
+
+        def local_train(global_state, x, y, r):
             cids = (offset.astype(jnp.uint32)
                     + jnp.arange(k_loc, dtype=jnp.uint32))
             idx = self.engine.round_plan(r, client_ids=cids,
                                          n_samples=slice_k(n_dev))
-            return self.engine._train_all(self.unravel(global_vec), x, y, idx)
+            if self.params_mode == "pytree":
+                return self.engine._train_all_tree(global_state, x, y, idx)
+            return self.engine._train_all(self.unravel(global_state), x, y,
+                                          idx)
 
         return RoundStreams(
             local_train=local_train,
-            latencies=lambda r: slice_k(counter_latencies(
-                self._lat_key, r, k, sc.lat_lo, sc.lat_hi)),
-            channel=lambda t: slice_k(sample_channel_gains(
-                round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan)),
+            latencies=lambda r: pad_slice(counter_latencies(
+                self._lat_key, r, k, sc.lat_lo, sc.lat_hi), jnp.inf),
+            channel=lambda t: pad_slice(sample_channel_gains(
+                round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan), 0.0),
             noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
         )
 

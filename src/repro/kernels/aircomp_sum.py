@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
@@ -114,3 +115,46 @@ def aircomp_sum_psum(stacked: jnp.ndarray, bp: jnp.ndarray,
     varsigma = jnp.maximum(jax.lax.psum(jnp.sum(bp), axis_name), varsigma_min)
     agg = ((acc + noise.astype(acc.dtype)) / varsigma).astype(stacked.dtype)
     return agg, varsigma
+
+
+def aircomp_sum_tree_psum(stacked_leaves, bp: jnp.ndarray, noise_leaves,
+                          axis_name, varsigma_min: float | None = None):
+    """AirComp reduction for a params PYTREE inside ``jax.shard_map`` with
+    the leading K axis of every leaf laid over mesh client axis/axes.
+
+    stacked_leaves: list of (K_local, ...) leaves (tree_flatten order);
+    bp: (K_local,) masked transmit powers b_k p_k; noise_leaves: matching
+    per-leaf slices of the SAME flat AWGN realization on every shard
+    (``repro.core.aggregation.stacked_tree_noise`` from the replicated key
+    — eq. 6 adds noise once at the server, not per client or per leaf).
+
+    One-psum-per-round invariant: each leaf's local superposition partial
+    (the same (1, K)x(K, D) contraction the single-leaf entry runs) is
+    flattened in f32, all partials are concatenated WITH the local
+    varsigma partial appended, and the cross-shard reduction is a single
+    psum of that flat vector — never one collective per leaf. Noise joins
+    the f32 accumulator once, after the collective, so every shard
+    normalizes the same received y.
+
+    Returns (list of (D_leaf...) aggregates cast back to each leaf's
+    dtype, varsigma) — both replicated across shards.
+    """
+    if varsigma_min is None:
+        from repro.core.aircomp import VARSIGMA_MIN
+        varsigma_min = VARSIGMA_MIN
+    bp32 = bp[None, :].astype(jnp.float32)
+    parts = [jax.lax.dot_general(
+        bp32, leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)[0]
+        for leaf in stacked_leaves]
+    parts.append(jnp.sum(bp).astype(jnp.float32)[None])
+    flat = jax.lax.psum(jnp.concatenate(parts), axis_name)   # the ONE psum
+    varsigma = jnp.maximum(flat[-1], varsigma_min)
+    out, off = [], 0
+    for leaf, noise in zip(stacked_leaves, noise_leaves):
+        size = int(np.prod(leaf.shape[1:]))
+        acc = flat[off:off + size]
+        off += size
+        agg = (acc + noise.reshape(-1).astype(acc.dtype)) / varsigma
+        out.append(agg.astype(leaf.dtype).reshape(leaf.shape[1:]))
+    return out, varsigma

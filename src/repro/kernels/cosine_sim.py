@@ -71,10 +71,13 @@ def cosine_sim_shard(deltas: jnp.ndarray, g: jnp.ndarray, axis_name=None,
     """Per-client cosines for use INSIDE ``jax.shard_map`` with K laid over
     the mesh client axis/axes.
 
-    deltas: (K_local, D) this shard's client deltas; g: (D,) the replicated
-    global direction. The eq.-25 reduction runs over D — which every shard
-    holds whole under the client-axis layout — so each client's cosine is
-    computed entirely on its own shard with NO collective; this entry point
+    deltas: this shard's client deltas — a pytree of (K_local, ...) leaves
+    (a bare (K_local, D) matrix is the raveled single-leaf case); g: the
+    matching replicated global-direction pytree / (D,) vector. The eq.-25
+    reduction runs over the model dims — which every shard holds whole
+    under the client-axis layout — so each client's cosine is computed
+    entirely on its own shard with NO collective (per-leaf partials are
+    accumulated locally, never psum'd); this entry point
     exists to make that contract explicit at shard_map call sites
     (``axis_name`` is accepted for symmetry with the psum-bearing
     reductions and intentionally unused). The math delegates to the ONE

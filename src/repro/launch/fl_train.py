@@ -15,9 +15,14 @@ lax.scan step; see EXPERIMENTS.md §Fused PAOTA round); ``--engine
 sharded`` runs the same round scanned under ``jax.shard_map`` over the
 mesh client axis (repro.fl.sharded.ShardedPAOTA — per-client stages
 parallel across devices, AirComp/P2 as psums; needs a multi-device
-backend, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU,
-with --clients divisible by the device count; see EXPERIMENTS.md
-§Sharded PAOTA round).
+backend, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=8 on CPU;
+a --clients count the devices don't divide pads with masked phantom
+clients; see EXPERIMENTS.md §Sharded PAOTA round).
+
+``--params-mode pytree`` makes the fused/sharded drivers carry the model
+as its native params pytree instead of a raveled vector (EXPERIMENTS.md
+§Pytree round core) — the path that places transformer/MoE client leaves
+via ``repro.sharding.rules.stack_client_specs``.
 """
 from examples.fl_noniid_mnist import main
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.aggregation import paota_aggregate_stacked
 from repro.launch.mesh import client_axes_for, data_axes
 from repro.launch.shapes import InputShape, shape_config
 from repro.models.config import ModelConfig
@@ -162,19 +163,16 @@ def make_paota_train_step(cfg: ModelConfig, mesh, shape: InputShape, *,
 
     def step(stacked, batch, powers, mask, seed):
         new_stacked, losses = jax.vmap(local_sgd)(stacked, batch)
+        # AirComp superposition via the ONE shared tree aggregation helper
+        # (repro.core.aggregation) — the same per-leaf weighted reduction +
+        # single flat AWGN realization the FL round core runs, with the
+        # channel noise expressed at sigma = sigma_over_varsigma * varsigma
+        # scale (this step's SNR knob)
         bp = (powers * mask).astype(jnp.float32)
-        varsigma = jnp.maximum(jnp.sum(bp), 1e-12)
-
-        flat, treedef = jax.tree_util.tree_flatten(new_stacked)
-        agg_flat = []
-        for i, leaf in enumerate(flat):
-            s = jnp.einsum("k,k...->...", bp.astype(leaf.dtype), leaf)
-            if sigma_over_varsigma > 0:
-                noise = sigma_over_varsigma * varsigma * jax.random.normal(
-                    jax.random.fold_in(seed, i), leaf.shape[1:], jnp.float32)
-                s = s + noise.astype(leaf.dtype)
-            agg_flat.append((s / varsigma.astype(leaf.dtype)))
-        agg = jax.tree_util.tree_unflatten(treedef, agg_flat)
+        sigma = (sigma_over_varsigma * jnp.maximum(jnp.sum(bp), 1e-12)
+                 if sigma_over_varsigma > 0 else 0.0)
+        agg, varsigma = paota_aggregate_stacked(new_stacked, powers, mask,
+                                                seed, sigma)
 
         # ready clients receive the aggregate; stragglers keep training state
         def merge(a, local):

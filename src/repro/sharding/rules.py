@@ -95,13 +95,18 @@ def _base_spec(keys: Tuple[str, ...], shape: Tuple[int, ...],
     return pad(())
 
 
-def param_specs(params_shape, cfg: ModelConfig, mesh,
+def param_specs(params_shape, cfg: Optional[ModelConfig], mesh,
                 ep_axis: Optional[str] = "data",
                 stack_axes: Tuple = (),
                 tp_axis: Optional[str] = "model") -> object:
     """PartitionSpec tree matching `params_shape` (a pytree of arrays or
     ShapeDtypeStructs). `stack_axes`: mesh axes for a leading client-stack
-    dim ((), or ("data",)/("pod",)/("pod","data"))."""
+    dim ((), or ("data",)/("pod",)/("pod","data")).
+
+    ``cfg=None`` is allowed for structureless pytrees (e.g. the paper's
+    MLP federated as a params tree): the name-based rules still apply —
+    unrecognized leaf paths simply fall through to replicated trailing
+    dims, so only the leading stack axes shard."""
     ep = ep_axis if (ep_axis in mesh.axis_names) else None
     tp = tp_axis if (tp_axis in mesh.axis_names and
                      tp_axis not in stack_axes) else None
@@ -119,10 +124,11 @@ def param_specs(params_shape, cfg: ModelConfig, mesh,
     return jax.tree_util.tree_map_with_path(one, params_shape)
 
 
-def stack_client_specs(params_shape, cfg: ModelConfig, mesh, client_axes,
-                       ep_axis: Optional[str] = None):
+def stack_client_specs(params_shape, cfg: Optional[ModelConfig], mesh,
+                       client_axes, ep_axis: Optional[str] = None):
     """Specs for client-stacked params (K, ...). Inside a client replica,
-    TP over 'model'; EP over `ep_axis` only if it's not a client axis."""
+    TP over 'model'; EP over `ep_axis` only if it's not a client axis.
+    ``cfg=None``: leading client axes only (see ``param_specs``)."""
     ep = ep_axis
     if ep is None:
         ep = "data" if ("data" in mesh.axis_names

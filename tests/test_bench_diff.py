@@ -1,0 +1,71 @@
+"""Bench differ: >2x wall-clock regressions vs the previous artifacts
+fail; noise-floor micro rows, cross-environment baselines, and
+improvements pass."""
+import json
+import os
+
+from benchmarks.diff import diff_artifacts, load_artifacts, main
+
+
+def _write(d, name, rows, **extra):
+    with open(os.path.join(d, f"BENCH_{name}.json"), "w") as f:
+        json.dump({"name": name, "rows": rows, **extra}, f)
+
+
+def test_diff_flags_only_real_regressions(tmp_path):
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "roundbench", [
+        {"name": "big", "us_per_call": 50_000.0},
+        {"name": "ok", "us_per_call": 20_000.0},
+        {"name": "tiny", "us_per_call": 50.0},
+    ])
+    _write(cur, "roundbench", [
+        {"name": "big", "us_per_call": 150_000.0},   # 3x -> regression
+        {"name": "ok", "us_per_call": 25_000.0},     # 1.25x -> fine
+        {"name": "tiny", "us_per_call": 900.0},      # 18x but < noise floor
+        {"name": "new_row", "us_per_call": 1.0},     # no baseline -> skip
+    ])
+    report, regressions = diff_artifacts(
+        load_artifacts(str(base)), load_artifacts(str(cur)),
+        ratio=2.0, min_us=1000.0)
+    assert len(report) == 3
+    assert [(a, n) for a, n, *_ in regressions] == [("roundbench", "big")]
+
+
+def test_diff_skips_cross_environment_baselines(tmp_path):
+    """A baseline recorded on a different backend/device count reports
+    but never fails — absolute wall clocks aren't comparable."""
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "a", [{"name": "r", "us_per_call": 10_000.0}],
+           backend="cpu", device_count=8)
+    _write(cur, "a", [{"name": "r", "us_per_call": 90_000.0}],
+           backend="cpu", device_count=1)
+    report, regressions = diff_artifacts(
+        load_artifacts(str(base)), load_artifacts(str(cur)),
+        ratio=2.0, min_us=1000.0)
+    assert len(report) == 1 and not regressions
+    assert "env mismatch" in report[0][-1]
+    # same env -> the same 9x row fails
+    _write(cur, "a", [{"name": "r", "us_per_call": 90_000.0}],
+           backend="cpu", device_count=8)
+    _, regressions = diff_artifacts(
+        load_artifacts(str(base)), load_artifacts(str(cur)),
+        ratio=2.0, min_us=1000.0)
+    assert len(regressions) == 1
+
+
+def test_diff_cli_exit_codes(tmp_path):
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    _write(base, "a", [{"name": "r", "us_per_call": 10_000.0}])
+    _write(cur, "a", [{"name": "r", "us_per_call": 12_000.0}])
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 0
+    _write(cur, "a", [{"name": "r", "us_per_call": 30_000.0}])
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+    # an artifact only in the baseline (e.g. a renamed bench) is not an error
+    _write(base, "gone", [{"name": "r", "us_per_call": 5_000.0}])
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 1
+    assert main(["--baseline", str(tmp_path / "missing"),
+                 "--current", str(cur)]) == 2

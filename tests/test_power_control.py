@@ -40,6 +40,26 @@ def test_waterfill_scales_to_k100():
     assert wf.objective <= pgd.objective * 1.001 + 1e-12
 
 
+@pytest.mark.parametrize("seed,k", [(0, 100), (1, 1000), (2, 5000)])
+def test_waterfill_prefix_matches_dense(seed, k):
+    """The O((K+G) log K) sorted-prefix-sum grid evaluator (the numpy host
+    path past K ~ 4096, where the dense (grid, K) matrix cost hundreds of
+    MB per solve) lands on the dense path's optimum: objectives match to
+    float summation order; beta only to ~sqrt(eps) because the P2 ratio is
+    flat in tau near the optimum."""
+    rng = np.random.default_rng(seed)
+    prob = _rand_problem(rng, k)
+    dense = solve_waterfill(prob, method="dense")
+    prefix = solve_waterfill(prob, method="prefix")
+    assert prefix.objective == pytest.approx(dense.objective, rel=1e-8)
+    np.testing.assert_allclose(prefix.beta, dense.beta, atol=1e-4)
+    # auto dispatch: dense below the threshold, prefix above
+    from repro.core.boxqp import PREFIX_K_THRESHOLD
+    auto = solve_waterfill(prob)
+    expect = dense if k < PREFIX_K_THRESHOLD else prefix
+    assert auto.objective == pytest.approx(expect.objective, rel=1e-12)
+
+
 @pytest.mark.parametrize("k", [4, 37, 100])
 def test_waterfill_jnp_matches_numpy_reference(k):
     """The jit-traceable float32 solver (the fused round's P2 step) lands
