@@ -82,6 +82,10 @@ class BenchSetting:
     params_mode: str = "raveled" # fused/sharded model carry: "raveled"
                                  # (flat (K, d) stack) | "pytree" (params
                                  # tree carried natively by the round core)
+    pending_dtype: str = "float32"  # fused/sharded carry storage for the
+                                 # (K, ...) planes: "bfloat16" halves the
+                                 # working set (f32 accumulation; globals
+                                 # stay f32)
 
     @classmethod
     def from_env(cls, **kw):
@@ -127,7 +131,8 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
             cls = ShardedPAOTA if s.engine == "sharded" else FusedPAOTA
             srv = cls(params, clients, chan, sched,
                       PAOTAConfig(solver=s.solver, seed=s.seed),
-                      params_mode=s.params_mode)
+                      params_mode=s.params_mode,
+                      pending_dtype=s.pending_dtype)
         else:
             srv = PAOTAServer(params, clients, chan, sched,
                               PAOTAConfig(solver=s.solver, seed=s.seed,

@@ -10,7 +10,10 @@ current time exceeds ``ratio`` x its baseline (default 2.0 — the CI
 regression bar) is a regression; the process exits nonzero if any row
 regressed. Rows faster than ``--min-us`` in the baseline (default 1 ms)
 are reported but never fail the run — micro-rows on shared CI cores are
-dominated by scheduler noise, not code. An artifact whose baseline was
+dominated by scheduler noise, not code. Rows (or whole artifacts) with no
+baseline entry are flagged ``new (no baseline)`` and never fail — a newly
+introduced series must survive its first CI run; it becomes gated once
+its artifact is committed. An artifact whose baseline was
 recorded on a different backend or device count is likewise report-only:
 absolute wall clocks only gate on a like-for-like environment (for
 machine-speed drift, raise the bar with ``REPRO_BENCH_DIFF_RATIO``).
@@ -73,13 +76,26 @@ def diff_artifacts(baseline: Dict, current: Dict, ratio: float,
     for art, cur in sorted(current.items()):
         base = baseline.get(art)
         if not base or not base["rows"]:
+            # a whole artifact with no baseline: a newly-introduced series
+            # — report it so the introduction is visible, never fail it
+            for name, cur_us in sorted(cur["rows"].items()):
+                report.append((art, name, 0.0, cur_us, 0.0,
+                               "new (no baseline)"))
             continue
         env_mismatch = (base["env"] is not None and cur["env"] is not None
                         and base["env"] != cur["env"])
         base_rows = base["rows"]
         for name, cur_us in cur["rows"].items():
             base_us = base_rows.get(name)
-            if base_us is None or base_us <= 0:
+            if base_us is None:
+                # newly-added row inside an existing artifact: first
+                # introduction must not fail the differ
+                report.append((art, name, 0.0, cur_us, 0.0,
+                               "new (no baseline)"))
+                continue
+            if base_us <= 0:
+                # pre-existing sentinel/ratio row (us_per_call 0) — not
+                # new, not comparable: skip silently as always
                 continue
             factor = cur_us / base_us
             flag = ""

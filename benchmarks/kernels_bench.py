@@ -45,6 +45,25 @@ def run() -> list:
                  "us_per_call": round(us, 1),
                  "derived": f"bytes={(k * d + d) * 4};one_pass=True"})
 
+    # PR-5 delta-plane kernels: the round's two remaining K x d sweeps.
+    # round_stats fuses dots + delta/payload sq-norms + ||g||^2 (replaces
+    # the 3-pass client_dots/client_sq_norms x2 composition); superpose
+    # fuses b*p masking + superposition + AWGN + varsigma normalization
+    # (replaces the 4-pass scale/reduce/add/normalize composition).
+    f4 = jax.jit(lambda x, g: ref.round_stats_ref(x, g, x))
+    us = _time(f4, x, g)
+    rows.append({"name": "round_stats_ref_K100_d8070",
+                 "us_per_call": round(us, 1),
+                 "derived": f"bytes={(2 * k * d + d) * 4};"
+                            f"fused_passes=1_vs_3_naive"})
+    mask = jnp.asarray((rng.random(k) < 0.5).astype(np.float32))
+    f5 = jax.jit(lambda x, bp, m, n: ref.superpose_normalize_ref(x, bp, m, n))
+    us = _time(f5, x, bp, mask, noise)
+    rows.append({"name": "superpose_normalize_ref_K100_d8070",
+                 "us_per_call": round(us, 1),
+                 "derived": f"bytes={(k * d + 2 * d) * 4};"
+                            f"fused_passes=1_vs_4_naive;emits_varsigma=True"})
+
     q = jnp.asarray(rng.normal(size=(4, 512, 64)).astype(np.float32))
     f3 = jax.jit(lambda q: ref.swa_attention_ref(q, q, q, window=128))
     us = _time(f3, q)

@@ -6,6 +6,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline — per (arch x shape x mesh) roofline terms from the dry-run
   fl_engine — legacy vs batched federation engine rounds/sec (K up to 1000)
   fused_round — host-loop vs fused lax.scan PAOTA rounds/sec (K up to 1000)
+  round_perf — the canonical tracked delta-plane series: host/fused/sharded
+             seconds/round at K in {16, 1000}, raveled + pytree, model +
+             delta transmit (d ~= 55k MLP, 1 local step — data-plane bound)
   sharded_round — fused 1-device vs shard_map'd 8-device PAOTA rounds/sec
              (K up to 10000; runs in a subprocess with forced host devices)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
@@ -26,11 +29,12 @@ import sys
 import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
-           "fused_round_bench", "sharded_round_bench", "fig3", "fig4",
-           "table1", "ablation"]
+           "fused_round_bench", "round_perf_bench", "sharded_round_bench",
+           "fig3", "fig4", "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
            "fused_round": "fused_round_bench", "fused": "fused_round_bench",
+           "round_perf": "round_perf_bench",
            "sharded_round": "sharded_round_bench",
            "sharded": "sharded_round_bench"}
 

@@ -34,13 +34,21 @@ def main():
                          "stack (historical); pytree = the params tree "
                          "carried natively by the round core (allclose "
                          "trajectories, tree-reduced psums)")
+    ap.add_argument("--pending-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="fused/sharded carry storage for the (K, ...) "
+                         "pending/delta planes: bfloat16 halves the K x d "
+                         "working set (f32 accumulation everywhere; the "
+                         "globals stay f32) — footprint opt-in for "
+                         "giant-model clients")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
     s = BenchSetting.from_env(n_rounds=args.rounds, n_clients=args.clients,
                               n0_dbm_hz=args.n0, solver=args.solver,
                               engine=args.engine,
-                              params_mode=args.params_mode)
+                              params_mode=args.params_mode,
+                              pending_dtype=args.pending_dtype)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

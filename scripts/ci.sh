@@ -4,6 +4,8 @@
 #   scripts/ci.sh          fast tier: everything not marked `slow` (<90s)
 #                          + the 8-virtual-device sharding tests
 #                          + fused-round smoke with artifact check
+#                          + round-perf smoke (tracked delta-plane series,
+#                            K=16; >2x wall-clock regressions fail)
 #   CI_FULL=1 scripts/ci.sh   full suite (nightly-style) + sharded
 #                          benchmark smoke (8 forced devices, K=16)
 #   CI_BENCH=1 scripts/ci.sh  also run the engine benchmark after tests
@@ -43,6 +45,21 @@ art = json.load(open(f"{sys.argv[1]}/BENCH_fused_round_smoke.json"))
 assert art["rows"] and all("us_per_call" in r for r in art["rows"]), art
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows, "
       f"{art['device_count']} devices)")
+EOF
+
+# round-perf smoke: the canonical tracked delta-plane series (K=16 subset
+# of benchmarks/round_perf_bench — host/fused inline + sharded in a forced
+# 8-device subprocess). The regenerated artifact is gated by the >2x diff
+# below against the committed BENCH_round_perf_smoke.json.
+rm -f "$BENCH_OUT/BENCH_round_perf_smoke.json"
+python -m benchmarks.round_perf_bench smoke
+python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_round_perf_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("fused_raveled_k16" in n for n in names), names
+assert any("sharded_raveled_k16" in n for n in names), names
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
 
 if [ "${CI_FULL:-0}" = "1" ]; then

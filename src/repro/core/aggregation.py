@@ -103,8 +103,10 @@ def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
                                                aircomp_sum_tree_psum)
         noise = stacked_tree_noise(key, leaves, sigma_n)
         if single:
+            # noise stays f32: the psum entry accumulates f32 and returns
+            # an f32 aggregate regardless of payload storage dtype
             agg, varsigma = aircomp_sum_psum(
-                leaves[0], bp, noise[0].astype(leaves[0].dtype), axis_name,
+                leaves[0], bp, noise[0], axis_name,
                 varsigma_min=VARSIGMA_MIN)
             return jax.tree_util.tree_unflatten(treedef, [agg]), varsigma
         agg_leaves, varsigma = aircomp_sum_tree_psum(
@@ -118,14 +120,26 @@ def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
     # sigma_over_varsigma=0) skips the model-sized AWGN draw entirely —
     # XLA does not fold a float multiply-by-zero away
     noiseless = isinstance(sigma_n, (int, float)) and sigma_n == 0.0
-    noise = None if noiseless else stacked_tree_noise(key, leaves, sigma_n)
+    if noiseless:
+        agg = []
+        for leaf in leaves:
+            l2 = leaf.reshape((leaf.shape[0], -1))
+            acc = jnp.einsum("k,kd->d", bp.astype(jnp.float32),
+                             l2.astype(jnp.float32))
+            agg.append((acc / varsigma).reshape(leaf.shape[1:]))
+        return jax.tree_util.tree_unflatten(treedef, agg), varsigma
+    # fused superpose-and-normalize per leaf (sweep 2 of the round): b*p
+    # masking, superposition, AWGN, and the varsigma division in one pass
+    # — compiled Pallas kernel on TPU, f32-accumulating einsum elsewhere
+    # (repro.kernels.ops.superpose_normalize). Leaves may be bf16; the
+    # aggregate always comes back f32 (the globals stay f32).
+    from repro.kernels.ops import superpose_normalize
+    noise = stacked_tree_noise(key, leaves, sigma_n)
     agg = []
-    for i, leaf in enumerate(leaves):
-        l2 = leaf.reshape((leaf.shape[0], -1))
-        acc = jnp.einsum("k,kd->d", bp.astype(leaf.dtype), l2)
-        if not noiseless:
-            acc = acc + noise[i].reshape(-1).astype(leaf.dtype)
-        out = acc / varsigma.astype(leaf.dtype)
+    for leaf, nz in zip(leaves, noise):
+        out, _ = superpose_normalize(leaf.reshape((leaf.shape[0], -1)),
+                                     powers, mask, nz.reshape(-1),
+                                     vs_min=VARSIGMA_MIN)
         agg.append(out.reshape(leaf.shape[1:]))
     return jax.tree_util.tree_unflatten(treedef, agg), varsigma
 

@@ -68,8 +68,15 @@ def _accumulate(parts):
 
 
 def client_sq_norms(tree):
-    """(K,) per-client ||.||^2 over every leaf's trailing dims."""
-    return _accumulate([jnp.sum(_leaf2d(l) * _leaf2d(l), -1)
+    """(K,) per-client ||.||^2 over every leaf's trailing dims.
+
+    Computed as a batched dot (``einsum kd,kd->k``), not ``sum(x*x, -1)``
+    — XLA-CPU materializes the (K, d) square for the latter (an extra
+    full write+read of the plane) but contracts the batched dot in one
+    streaming pass. Same formulation as the fused round-stats sweep
+    (``repro.kernels.round_stats``), so the host reference's constraint-
+    (7) norms stay bit-identical to the fused core's."""
+    return _accumulate([jnp.einsum("kd,kd->k", _leaf2d(l), _leaf2d(l))
                         for l in jax.tree_util.tree_leaves(tree)])
 
 

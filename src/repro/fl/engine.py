@@ -138,11 +138,20 @@ class BatchedEngine:
     def _train_all(self, params, x, y, idx):
         """params: pytree of (…) broadcast to every client; x/y: padded
         (K, n_max, …) data; idx: (K, M, B) minibatch plans. Returns
-        (K, d) raveled trained models."""
-        def one_client(xc, yc, plan):
-            return ravel_pytree(self._train_one(params, xc, yc, plan))[0]
+        (K, d) raveled trained models.
 
-        return jax.vmap(one_client)(x, y, idx)
+        The ravel happens ONCE on the stacked result — reshape each
+        (K, ...) leaf to (K, d_leaf) and concatenate in tree_flatten
+        order — which is value-identical to ``ravel_pytree`` per client
+        (same leaf order, same row-major ravel) but costs one (K, d)
+        write instead of a vmapped per-client concatenate (~40% of the
+        train call at transformer-scale d)."""
+        trained = self._train_all_tree(params, x, y, idx)
+        leaves = jax.tree_util.tree_leaves(trained)
+        if len(leaves) == 1:
+            return leaves[0].reshape((leaves[0].shape[0], -1))
+        return jnp.concatenate(
+            [l.reshape((l.shape[0], -1)) for l in leaves], axis=1)
 
     def _train_all_tree(self, params, x, y, idx):
         """Pytree twin of ``_train_all``: same local SGD, but the trained

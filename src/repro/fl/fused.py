@@ -68,14 +68,24 @@ class FusedPAOTA:
     split across leaves) and agree allclose round for round — float
     reduction regrouping across leaves is the only difference
     (tests/test_pytree_round.py).
+
+    ``pending_dtype="bfloat16"`` stores the carry's (K, ...) planes
+    (pending models + their deltas) in bf16 — half the K x d working set;
+    every reduction still accumulates f32 and the globals stay f32.
+    ``donate=False`` disables carry donation into the scan (the default
+    donates; kept as a flag for the donation-safety equivalence test).
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
-                 params_mode: str = "raveled"):
+                 params_mode: str = "raveled",
+                 pending_dtype: str = "float32", donate: bool = True):
         if params_mode not in ("raveled", "pytree"):
             raise ValueError(f"params_mode={params_mode!r} (expected "
                              "'raveled' or 'pytree')")
+        if pending_dtype not in ("float32", "bfloat16"):
+            raise ValueError(f"pending_dtype={pending_dtype!r} (expected "
+                             "'float32' or 'bfloat16')")
         self.params_mode = params_mode
         if cfg.use_kernel:
             raise ValueError("use_kernel routes through the host-path "
@@ -110,14 +120,22 @@ class FusedPAOTA:
                               p_max_watts=chan.p_max_watts,
                               sigma_n=chan.sigma_n,
                               delta_t=sched_cfg.delta_t,
-                              transmit_delta=cfg.transmit == "delta")
+                              transmit_delta=cfg.transmit == "delta",
+                              pending_dtype=pending_dtype)
         self._lat_key = jax.random.PRNGKey(sched_cfg.seed)
         self._srv_key = jax.random.PRNGKey(cfg.seed)
         engine.enable_counter_plan(self._srv_key)
         self._carry: RoundCarry | None = None
         self.history: List[dict] = []
         self._jit_init = jax.jit(self._init_carry)
-        self._jit_scan = jax.jit(self._run_scan, static_argnames=("n_rounds",))
+        # the round carry is DONATED into the scan: advance() hands its
+        # K x d planes (pending/deltas stacks) back to XLA for in-place
+        # reuse instead of holding them alive across the call boundary —
+        # self._carry is rebound to the scan's output, so the donated
+        # buffers are never read again (donate=False exists for the
+        # donation-safety equivalence test)
+        self._jit_scan = jax.jit(self._run_scan, static_argnames=("n_rounds",),
+                                 donate_argnums=(0,) if donate else ())
 
     # ------------------------------------------------------------------
     # jitted pieces
@@ -149,7 +167,11 @@ class FusedPAOTA:
         )
 
     def _init_carry(self, vec, x, y) -> RoundCarry:
-        return init_round_carry(vec, x, y, streams=self._streams())
+        # transmit='delta' never reads the full local models: the carry is
+        # the delta plane alone (half the K x d working set)
+        return init_round_carry(vec, x, y, streams=self._streams(),
+                                pending_dtype=self._rcfg.pending_dtype,
+                                keep_pending=not self._rcfg.transmit_delta)
 
     def _run_scan(self, carry: RoundCarry, x, y, n_rounds: int):
         return scan_rounds(carry, x, y, n_rounds, rcfg=self._rcfg,

@@ -2,14 +2,38 @@
 period, shared by every driver.
 
 The federated model is an arbitrary params PYTREE: every model-sized
-quantity (globals, pending local models, deltas) is carried leaf-wise,
-and every cross-model scalar (per-client norms and cosines, the AirComp
-superposition, varsigma) is computed as a tree-reduced sum — per-leaf
-partials accumulated locally, then reduced ONCE (one psum per round under
-sharding, never one per leaf). The raveled federation is the trivial
-single-(K, d)-leaf pytree and executes the historical op sequence
-bit-for-bit; ``waterfill_beta_jnp`` / ``power_from_beta`` stay
-shape-agnostic consumers of the reduced (K,) scalars.
+quantity (globals, pending local models, their deltas) is carried
+leaf-wise, and every cross-model scalar (per-client norms and cosines,
+the AirComp superposition, varsigma) is computed as a tree-reduced sum —
+per-leaf partials accumulated locally, then reduced ONCE (one psum per
+round under sharding, never one per leaf). The raveled federation is the
+trivial single-(K, d)-leaf pytree; ``waterfill_beta_jnp`` /
+``power_from_beta`` stay shape-agnostic consumers of the reduced (K,)
+scalars.
+
+The delta plane is swept exactly TWICE per round (PR 5): the carry holds
+the local-update deltas directly (``RoundCarry.deltas`` — the round used
+to carry the per-client start models and re-derive ``pending - starts``
+every period), so
+
+* sweep 1 — ``repro.kernels.ops.round_stats``: per-client dots with the
+  global direction, delta sq-norms, payload sq-norms for the power
+  constraint (7), and the global-direction sq-norm, all in one fused pass
+  (compiled Pallas kernel on TPU; on CPU the jnp twin's batched-dot
+  formulation — never a materialized square — with XLA multi-output
+  fusion doing the pass merging);
+* sweep 2 — the superpose-and-normalize aggregation (eqs. 6+8), b·p
+  masking + superposition + AWGN + varsigma normalization in one pass
+  (``repro.kernels.aircomp_sum.superpose_normalize_pallas`` on TPU, the
+  f32-accumulating einsum elsewhere; one psum under sharding).
+
+``RoundCfg.pending_dtype`` optionally stores the carry's (K, ...) planes
+(pending + deltas) in bf16 — every kernel/reduction accumulates in f32,
+the globals stay f32, and the K x d working set halves for giant-model
+clients. Deltas are always computed in f32 BEFORE the storage cast
+(``trained - w_g``), never as a difference of rounded operands, so the
+bf16 error is a relative rounding of the small delta, not a catastrophic
+cancellation of two large models.
 
 ``paota_round_step`` is the pure round transition (``RoundCarry`` in,
 ``RoundCarry`` out): scheduler advance -> eq.-25 factors -> water-filling
@@ -17,27 +41,27 @@ P2 -> channel + instantaneous cap (7) -> AirComp -> zero-uploader-guarded
 update -> broadcast + local train. It is parameterized by
 
 * ``RoundCfg`` — the static problem constants (Theorem-1 c1/c0, channel
-  power/noise, the aggregation period), a plain NamedTuple of Python
-  scalars closed over at trace time;
+  power/noise, the aggregation period, the carry storage dtype), a plain
+  NamedTuple of Python scalars closed over at trace time;
 * ``RoundStreams`` — the per-driver data/RNG callbacks (local training,
   latency draws, channel draws, the per-round noise key). The callbacks
   are what let the same core run single-device (callbacks see all K
   clients) and mesh-sharded (callbacks see this shard's K/n slice of
   identical global draws);
-* ``axis_name`` — ``None`` for the single-device form (the exact op
-  sequence ``FusedPAOTA._step`` always ran — the extraction is
-  bit-identical), or the mesh client axis name(s) under ``jax.shard_map``:
-  per-client stages (local SGD, factors, channel, power) stay fully
-  parallel and only the AirComp superposition, the P2 water-filling
-  reductions, and the round metrics cross shards as ``psum``/``pmin``/
-  ``pmax`` collectives.
+* ``axis_name`` — ``None`` for the single-device form, or the mesh client
+  axis name(s) under ``jax.shard_map``: per-client stages (local SGD,
+  factors, channel, power) stay fully parallel — the round stats are
+  shard-local by construction (their reductions run over the model dims,
+  which every shard holds whole) — and only the AirComp superposition,
+  the P2 water-filling reductions, and the round metrics cross shards as
+  ``psum``/``pmin``/``pmax`` collectives.
 
 Consumers: ``repro.fl.fused.FusedPAOTA`` (single device, scan over
-rounds), ``repro.fl.sharded.ShardedPAOTA`` (the same scan under
-``shard_map`` over the mesh client axis), and the host-path
-``repro.fl.server.PAOTAServer`` whose numpy round consumes the shared
-stage helpers (``eq25_factors`` / ``constraint7_powers``) so the three
-implementations cannot drift apart stage by stage.
+rounds, carry donated between scans), ``repro.fl.sharded.ShardedPAOTA``
+(the same scan under ``shard_map`` over the mesh client axis), and the
+host-path ``repro.fl.server.PAOTAServer`` whose numpy round consumes the
+shared stage helpers (``eq25_factors`` / ``constraint7_powers``) so the
+three implementations cannot drift apart stage by stage.
 """
 from __future__ import annotations
 
@@ -50,8 +74,7 @@ from repro.core.aggregation import (guarded_global_update,
                                     paota_aggregate_stacked)
 from repro.core.aircomp import VARSIGMA_MIN, effective_power_cap
 from repro.core.boxqp import waterfill_beta_jnp
-from repro.core.power_control import (client_sq_norms, cosine_similarity,
-                                      global_sq_norm, power_from_beta,
+from repro.core.power_control import (client_sq_norms, power_from_beta,
                                       similarity_factor, staleness_factor)
 from repro.core.scheduler import sched_advance, sched_broadcast
 
@@ -61,11 +84,15 @@ class RoundCarry(NamedTuple):
 
     The federated model is an arbitrary params PYTREE: ``global_vec`` /
     ``prev_global`` hold one copy of the model (leaves of the params'
-    natural shapes), ``pending`` / ``starts`` hold the client-stacked form
-    (every leaf with a leading K axis). The raveled federation is the
-    trivial single-leaf instance — a bare (d,) vector / (K, d) matrix —
-    and executes the exact historical op sequence (a jnp array IS a
-    one-leaf pytree, so nothing special-cases it).
+    natural shapes, always f32), ``pending`` / ``deltas`` hold the
+    client-stacked form (every leaf with a leading K axis, stored in
+    ``RoundCfg.pending_dtype``). ``deltas`` carries ``pending - start``
+    directly — the local update each client would transmit — computed in
+    f32 at broadcast time; the round never re-derives it from a stored
+    start model (one fewer K x d sweep per period, and the bf16 storage
+    mode stays a rounding of the small delta instead of a cancellation of
+    two large models). The raveled federation is the trivial single-leaf
+    instance — a bare (d,) vector / (K, d) matrix.
 
     Under the sharded driver the ``(K,)`` fields and the leading axis of
     every stacked leaf are laid over the mesh client axis (each shard
@@ -79,8 +106,12 @@ class RoundCarry(NamedTuple):
     model_round: jnp.ndarray  # (K,) i32 — round each client trains on
     global_vec: jnp.ndarray   # params pytree / (d,) — w_g^t
     prev_global: jnp.ndarray  # params pytree / (d,) — w_g^{t-1} (direction)
-    pending: jnp.ndarray      # (K, ...)-leaf pytree — in-flight local models
-    starts: jnp.ndarray       # (K, ...)-leaf pytree — global each trained from
+    pending: jnp.ndarray      # (K, ...)-leaf pytree — in-flight local models,
+                              # or None under transmit='delta' (the round
+                              # never reads the full local models there —
+                              # the delta plane IS the whole carry, halving
+                              # the K x d working set)
+    deltas: jnp.ndarray       # (K, ...)-leaf pytree — pending - start model
 
 
 class RoundCfg(NamedTuple):
@@ -93,6 +124,9 @@ class RoundCfg(NamedTuple):
     sigma_n: float            # channel noise std (concrete float)
     delta_t: float            # aggregation period (seconds)
     transmit_delta: bool      # True: clients transmit dw_k; False: w_k
+    pending_dtype: str = "float32"   # carry storage dtype for the (K, ...)
+                              # planes: "float32" | "bfloat16" (opt-in
+                              # half-footprint mode; f32 accumulation)
 
 
 class RoundStreams(NamedTuple):
@@ -113,33 +147,65 @@ class RoundStreams(NamedTuple):
 # shared stage helpers (host server + fused/sharded core)
 # ---------------------------------------------------------------------------
 
-def eq25_factors(pending, starts, global_vec, prev_global, stal, omega,
-                 use_kernel: bool = False):
-    """Stage 2 of the round — eq. 25 inputs: local-update deltas, staleness
-    factors rho_k, gradient-similarity factors theta_k. Pure jnp over
-    params pytrees (raveled = single leaf); per-client along the leading
-    axis, so it is shard-local under the client mesh axis (the cosine and
-    norm reductions run over the model dims, which every shard holds whole
-    — per-leaf partials accumulate locally, no collective).
+def round_factors(deltas, payload, global_vec, prev_global, stal, omega,
+                  eps=1e-12):
+    """Stage 2 of the round, one delta-plane sweep: eq.-25 staleness
+    factors rho_k, gradient-similarity factors theta_k, and the payload
+    sq-norms the power constraint (7) needs — all from ONE fused pass
+    over the stacked deltas (+ payload) via ``repro.kernels.ops
+    .round_stats``. ``payload=None`` means the payload IS the deltas
+    (transmit='delta'), so their sq-norms are reused instead of re-swept.
 
-    Returns (deltas pytree, rho, theta)."""
-    deltas = jax.tree_util.tree_map(jnp.subtract, pending, starts)
+    Per-client along the leading axis and shard-local under the client
+    mesh axis (every reduction runs over the model dims, which each shard
+    holds whole — per-leaf partials accumulate locally, no collective).
+
+    Returns (rho, theta, w_norm2)."""
+    from repro.kernels.ops import round_stats
     gdir = jax.tree_util.tree_map(jnp.subtract, global_vec, prev_global)
-    gnorm = jnp.sqrt(global_sq_norm(gdir))
-    cos = jnp.where(gnorm < 1e-12, 0.0,
-                    cosine_similarity(deltas, gdir, use_kernel=use_kernel))
+    dots, dn2, pn2, gn2 = round_stats(deltas, gdir, payload)
+    gnorm = jnp.sqrt(gn2)
+    den = jnp.sqrt(jnp.maximum(dn2, eps) * jnp.maximum(gn2, eps))
+    cos = jnp.where(gnorm < 1e-12, 0.0, dots / den)
     theta = similarity_factor(cos)
     rho = staleness_factor(stal, omega)
+    return rho, theta, (dn2 if payload is None else pn2)
+
+
+def eq25_factors(pending, starts, global_vec, prev_global, stal, omega,
+                 use_kernel: bool = False):
+    """Host-reference form of stage 2 (the ``PAOTAServer`` state is
+    (pending, starts), not carried deltas): derive the deltas, then run
+    the same fused one-sweep stats the on-device core uses. ``use_kernel``
+    is accepted for interface compatibility; kernel-vs-jnp routing is
+    backend-resolved inside ``repro.kernels.ops.round_stats``.
+
+    Returns (deltas pytree, rho, theta)."""
+    del use_kernel
+    deltas = jax.tree_util.tree_map(jnp.subtract, pending, starts)
+    rho, theta, _ = round_factors(deltas, None, global_vec, prev_global,
+                                  stal, omega)
     return deltas, rho, theta
 
 
-def constraint7_powers(powers, payload, h, p_max):
+def constraint7_powers(powers, payload, h, p_max, w_norm2=None):
     """Stage 4 — instantaneous power constraint (7) under the sampled
-    channel: p_k <- min(p_k, |h_k| sqrt(P_max / ||w_k||^2)), with
-    ||w_k||^2 tree-reduced over every leaf of the payload pytree.
-    Per-client, shard-local."""
-    w_norm2 = client_sq_norms(payload)
+    channel: p_k <- min(p_k, |h_k| sqrt(P_max / ||w_k||^2)). The fused
+    core passes ``w_norm2`` straight from the stage-2 stats sweep; the
+    host reference leaves it None and tree-reduces the payload here
+    (same chunked accumulation — ``client_sq_norms`` — so the two paths
+    agree to the float op). Per-client, shard-local."""
+    if w_norm2 is None:
+        w_norm2 = client_sq_norms(payload)
     return jnp.minimum(powers, effective_power_cap(w_norm2, h, p_max))
+
+
+def _storage_dtype(rcfg: RoundCfg):
+    return jnp.dtype(rcfg.pending_dtype)
+
+
+def _cast_rows(tree, dtype):
+    return jax.tree_util.tree_map(lambda l: l.astype(dtype), tree)
 
 
 # ---------------------------------------------------------------------------
@@ -150,10 +216,9 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
                      streams: RoundStreams, axis_name=None):
     """One PAOTA aggregation period as a pure function.
 
-    ``axis_name=None`` reproduces ``FusedPAOTA``'s historical op sequence
-    bit-for-bit. With a mesh axis name (or tuple of names), the (K,) /
-    (K, d) carry rows are this shard's clients and the cross-client
-    reductions go through collectives.
+    ``axis_name=None`` is the single-device form. With a mesh axis name
+    (or tuple of names), the (K,) / (K, d) carry rows are this shard's
+    clients and the cross-client reductions go through collectives.
 
     Returns (next_carry, per-round metrics dict of replicated scalars)."""
     k_local = carry.ready.shape[0]
@@ -175,10 +240,13 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     b = ready.astype(jnp.float32)
     stal = stal.astype(jnp.float32)
 
-    # 2. staleness + gradient-similarity factors (eq. 25)
-    deltas, rho, theta = eq25_factors(carry.pending, carry.starts,
-                                      carry.global_vec, carry.prev_global,
-                                      stal, rcfg.omega)
+    # 2. staleness + gradient-similarity factors (eq. 25) + the payload
+    # norms for constraint (7): ONE sweep over the carried delta plane
+    # (sweep 1 of 2)
+    payload = carry.deltas if rcfg.transmit_delta else carry.pending
+    rho, theta, w_norm2 = round_factors(
+        carry.deltas, None if rcfg.transmit_delta else carry.pending,
+        carry.global_vec, carry.prev_global, stal, rcfg.omega)
 
     # 3. P2 -> beta -> powers (exact water-filling, pure jnp; the grid and
     # golden-section reductions over K run as psums under sharding)
@@ -187,15 +255,17 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
                                       axis_name=axis_name)
     powers = power_from_beta(beta, rho, theta, p_max)
 
-    # 4. instantaneous power constraint (7) under the sampled channel
-    payload = deltas if rcfg.transmit_delta else carry.pending
+    # 4. instantaneous power constraint (7) under the sampled channel —
+    # the payload norms came with the stats sweep, no extra pass
     h = streams.channel(carry.t)
-    powers = constraint7_powers(powers, payload, h, rcfg.p_max_watts)
+    powers = constraint7_powers(powers, payload, h, rcfg.p_max_watts,
+                                w_norm2=w_norm2)
 
-    # 5. AirComp superposition + AWGN + normalization (eqs. 6+8) — the
-    # same jnp helper the host reference calls; under sharding the
-    # superposition is a psum over the client axis with the single shared
-    # noise realization joining once, after the reduction
+    # 5. AirComp superposition + AWGN + normalization (eqs. 6+8) in one
+    # fused pass (sweep 2 of 2) — the same jnp helper the host reference
+    # calls; under sharding the superposition is a psum over the client
+    # axis with the single shared noise realization joining once, after
+    # the reduction
     agg, varsigma = paota_aggregate_stacked(
         payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
         axis_name=axis_name)
@@ -205,21 +275,39 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         carry.global_vec, carry.prev_global, agg, varsigma,
         delta=rcfg.transmit_delta)
 
-    # 7. broadcast w^{r+1}: every uploader restarts local training
+    # 7. broadcast w^{r+1}: every uploader restarts local training. The
+    # carry's delta rows are refreshed as f32 ``trained - w_g^{r+1}``
+    # BEFORE the storage cast.
     t_next = carry.t + 1
     lat = streams.latencies(t_next)
     n_ready, n_busy, n_model = sched_broadcast(
         ready, carry.busy_until, carry.model_round, ready, time, lat, t_next)
     trained = streams.local_train(new_global, x, y, t_next)
+    dtype = _storage_dtype(rcfg)
 
     def row_select(new, old):
         m = ready.reshape((k_local,) + (1,) * (new.ndim - 1))
         return jnp.where(m, new, old)
 
-    pending = jax.tree_util.tree_map(row_select, trained, carry.pending)
-    starts = jax.tree_util.tree_map(
-        lambda g, s: row_select(jnp.broadcast_to(g[None], s.shape), s),
-        new_global, carry.starts)
+    pending = None if carry.pending is None else jax.tree_util.tree_map(
+        lambda tr, p: row_select(tr.astype(p.dtype), p),
+        trained, carry.pending)
+    if dtype == jnp.float32 and pending is not None:
+        # derive the delta rows from the NEW pending (identical values:
+        # ready rows of `pending` ARE the trained rows) — this lets XLA
+        # fuse the raveled concat straight into both carry writes instead
+        # of materializing a separate (K, d) trained plane
+        deltas = jax.tree_util.tree_map(
+            lambda p, dl, g: row_select(p - g[None], dl),
+            pending, carry.deltas, new_global)
+    else:
+        # bf16 storage (the delta MUST come from the f32 trained rows —
+        # deriving it from the already-rounded pending would cancel two
+        # large rounded models instead of rounding one small delta), and
+        # the pending-less transmit='delta' carry
+        deltas = jax.tree_util.tree_map(
+            lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype), dl),
+            trained, carry.deltas, new_global)
 
     n_upl = ksum(b)
     denom = jnp.maximum(n_upl, 1.0)
@@ -237,17 +325,23 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     carry = RoundCarry(t=t_next, time=time, ready=n_ready,
                        busy_until=n_busy, model_round=n_model,
                        global_vec=new_global, prev_global=new_prev,
-                       pending=pending, starts=starts)
+                       pending=pending, deltas=deltas)
     return carry, out
 
 
-def init_round_carry(vec, x, y, *, streams: RoundStreams) -> RoundCarry:
+def init_round_carry(vec, x, y, *, streams: RoundStreams,
+                     pending_dtype: str = "float32",
+                     keep_pending: bool = True) -> RoundCarry:
     """Round-0 kick-off: broadcast w_g^0 to everyone and precompute their
     local training (mirrors ``PAOTAServer.__init__``). ``vec`` is the
     params pytree (raveled = single (d,) leaf); shapes follow the streams'
-    view of the federation (all K single-device; K/n per shard)."""
-    pending = streams.local_train(vec, x, y, 0)
-    k_local = jax.tree_util.tree_leaves(pending)[0].shape[0]
+    view of the federation (all K single-device; K/n per shard). The f32
+    delta (``trained - w_g^0``) is formed before the optional storage
+    cast. ``keep_pending=False`` (transmit='delta') carries the delta
+    plane only."""
+    trained = streams.local_train(vec, x, y, 0)
+    k_local = jax.tree_util.tree_leaves(trained)[0].shape[0]
+    dtype = jnp.dtype(pending_dtype)
     return RoundCarry(
         t=jnp.int32(0),
         time=jnp.float32(0.0),
@@ -256,9 +350,9 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams) -> RoundCarry:
         model_round=jnp.zeros((k_local,), jnp.int32),
         global_vec=vec,
         prev_global=vec,
-        pending=pending,
-        starts=jax.tree_util.tree_map(
-            lambda g: jnp.broadcast_to(g[None], (k_local,) + g.shape), vec),
+        pending=_cast_rows(trained, dtype) if keep_pending else None,
+        deltas=jax.tree_util.tree_map(
+            lambda tr, g: (tr - g[None]).astype(dtype), trained, vec),
     )
 
 
@@ -267,7 +361,10 @@ def scan_rounds(carry: RoundCarry, x, y, n_rounds: int, *, rcfg: RoundCfg,
     """``lax.scan`` of ``paota_round_step`` over ``n_rounds`` periods —
     zero host round-trips inside. The scan nests cleanly under
     ``jax.shard_map`` (the sharded driver wraps THIS function, so a whole
-    multi-round advance is one collective program)."""
+    multi-round advance is one collective program). Drivers jit this with
+    the carry donated (``donate_argnums``): the K x d planes of scan r
+    are reused in place by scan r+1 instead of being copied across the
+    call boundary."""
     def step(c, _):
         return paota_round_step(c, x, y, rcfg=rcfg, streams=streams,
                                 axis_name=axis_name)

@@ -95,7 +95,8 @@ class ShardedPAOTA(FusedPAOTA):
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
                  mesh=None, client_axes=None, params_mode: str = "raveled",
-                 model_cfg=None):
+                 model_cfg=None, pending_dtype: str = "float32",
+                 donate: bool = True):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -118,7 +119,8 @@ class ShardedPAOTA(FusedPAOTA):
         # super() builds the engine, RoundCfg, keys, and jits _run_scan —
         # which the overrides below turn into the shard_map program
         super().__init__(init_params, clients, chan, sched_cfg, cfg,
-                         params_mode=params_mode)
+                         params_mode=params_mode, pending_dtype=pending_dtype,
+                         donate=donate)
         # phantom-client padding: pad K to the next multiple of the
         # client-axis extent with masked never-ready clients
         self.k_pad = -(-self.k // self.n_shards) * self.n_shards
@@ -157,7 +159,9 @@ class ShardedPAOTA(FusedPAOTA):
         self._carry_specs = RoundCarry(
             t=P(), time=P(), ready=P(ax), busy_until=P(ax),
             model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
-            pending=pend_spec, starts=pend_spec)
+            # transmit='delta' carries no pending plane (None subtree)
+            pending=None if self._rcfg.transmit_delta else pend_spec,
+            deltas=pend_spec)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]

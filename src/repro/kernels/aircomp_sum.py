@@ -81,6 +81,80 @@ def aircomp_sum_pallas(stacked: jnp.ndarray, bp: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# fused superpose-and-normalize (mask + superposition + AWGN + varsigma in
+# one pass, varsigma returned)
+# ---------------------------------------------------------------------------
+
+def _superpose_kernel(vs_min, p_ref, m_ref, x_ref, noise_ref, out_ref,
+                      vs_ref):
+    i = pl.program_id(0)
+    bp = p_ref[...] * m_ref[...]                # (1, K) f32, masked in-kernel
+    raw = jnp.sum(bp)
+    varsigma = jnp.maximum(raw, vs_min)
+    x = x_ref[...]                              # (K, BLOCK_D), f32 or bf16
+    n = noise_ref[...]                          # (1, BLOCK_D)
+    acc = jax.lax.dot_general(
+        bp, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)     # f32 accumulation always
+    out_ref[...] = (acc + n.astype(acc.dtype)) / varsigma
+
+    @pl.when(i == 0)
+    def _emit_vs():
+        vs_ref[...] = raw[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("vs_min", "block_d",
+                                             "interpret"))
+def superpose_normalize_pallas(stacked: jnp.ndarray, powers: jnp.ndarray,
+                               mask: jnp.ndarray, noise: jnp.ndarray, *,
+                               vs_min: float = 1e-12,
+                               block_d: int = DEFAULT_BLOCK_D,
+                               interpret: bool | None = None):
+    """Eqs. (6)+(8) in one sweep: stacked (K, D) payloads, powers/mask (K,)
+    -> ``(agg (D,) f32, varsigma f32 scalar)`` where
+
+        agg      = (sum_k b_k p_k stacked[k] + noise) / max(varsigma, vs_min)
+        varsigma = sum_k b_k p_k                       (raw, unclamped)
+
+    Extends ``aircomp_sum_pallas`` with the two pieces the round core had
+    to compute in separate passes: the b*p masking joins the kernel (no
+    materialized bp vector... trivial, but it keeps the contract whole)
+    and the eq.-8 normalizer comes back with the aggregate, so the
+    zero-uploader guard needs no second reduction. ``stacked`` may be
+    bf16; the contraction always accumulates in f32.
+
+    ``interpret=None`` resolves from the backend (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = backend_interpret_default()
+    k, d = stacked.shape
+    noise = noise.astype(jnp.float32)
+    pad = (-d) % block_d
+    if pad:
+        stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
+        noise = jnp.pad(noise, (0, pad))
+    dp = d + pad
+    kern = functools.partial(_superpose_kernel, float(vs_min))
+    agg, vs = pl.pallas_call(
+        kern,
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (0, 0)),          # powers
+            pl.BlockSpec((1, k), lambda i: (0, 0)),          # mask
+            pl.BlockSpec((k, block_d), lambda i: (0, i)),    # payload stripe
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),    # noise stripe
+        ],
+        out_specs=[pl.BlockSpec((1, block_d), lambda i: (0, i)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(powers[None, :].astype(jnp.float32), mask[None, :].astype(jnp.float32),
+      stacked, noise[None, :])
+    return agg[0, :d], vs[0, 0]
+
+
+# ---------------------------------------------------------------------------
 # shard-aware entry point (mesh client axis)
 # ---------------------------------------------------------------------------
 
@@ -100,7 +174,10 @@ def aircomp_sum_psum(stacked: jnp.ndarray, bp: jnp.ndarray,
     is one psum, and the noise joins the accumulator dtype once AFTER the
     collective so every shard normalizes the same received y.
 
-    Returns (aggregate (D,), varsigma) — both replicated across shards.
+    Returns (aggregate (D,) in f32, varsigma) — both replicated across
+    shards. The aggregate is NOT cast back to the payload dtype: a bf16
+    carry stores its planes rounded, but the global update must stay
+    full precision (same contract as ``superpose_normalize``).
     """
     if varsigma_min is None:
         # the division clamp doubles as the zero-uploader threshold; there
@@ -113,7 +190,7 @@ def aircomp_sum_psum(stacked: jnp.ndarray, bp: jnp.ndarray,
         preferred_element_type=jnp.float32)[0]            # (D,) local partial
     acc = jax.lax.psum(acc, axis_name)
     varsigma = jnp.maximum(jax.lax.psum(jnp.sum(bp), axis_name), varsigma_min)
-    agg = ((acc + noise.astype(acc.dtype)) / varsigma).astype(stacked.dtype)
+    agg = (acc + noise.astype(acc.dtype)) / varsigma
     return agg, varsigma
 
 
@@ -136,8 +213,10 @@ def aircomp_sum_tree_psum(stacked_leaves, bp: jnp.ndarray, noise_leaves,
     the f32 accumulator once, after the collective, so every shard
     normalizes the same received y.
 
-    Returns (list of (D_leaf...) aggregates cast back to each leaf's
-    dtype, varsigma) — both replicated across shards.
+    Returns (list of (D_leaf...) f32 aggregates, varsigma) — both
+    replicated across shards. Aggregates are NOT cast back to the leaf
+    dtype: a bf16 carry stores its planes rounded, but the global update
+    must stay full precision (same contract as ``superpose_normalize``).
     """
     if varsigma_min is None:
         from repro.core.aircomp import VARSIGMA_MIN
@@ -156,5 +235,5 @@ def aircomp_sum_tree_psum(stacked_leaves, bp: jnp.ndarray, noise_leaves,
         acc = flat[off:off + size]
         off += size
         agg = (acc + noise.reshape(-1).astype(acc.dtype)) / varsigma
-        out.append(agg.astype(leaf.dtype).reshape(leaf.shape[1:]))
+        out.append(agg.reshape(leaf.shape[1:]))
     return out, varsigma

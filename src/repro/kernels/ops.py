@@ -14,9 +14,13 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+import jax
+
 from repro.kernels.aircomp_sum import (aircomp_sum_pallas,
-                                       backend_interpret_default)
+                                       backend_interpret_default,
+                                       superpose_normalize_pallas)
 from repro.kernels.cosine_sim import cosine_partials_pallas
+from repro.kernels.round_stats import round_stats_jnp, round_stats_pallas
 from repro.kernels.swa_attention import swa_attention_pallas
 
 
@@ -30,6 +34,63 @@ def interpret_mode() -> bool:
     if env == "0":
         return True
     return backend_interpret_default()
+
+
+def kernels_compiled() -> bool:
+    """True when the Pallas kernels lower for real (TPU, or forced with
+    REPRO_PALLAS_COMPILE=1). The round's hot path switches on THIS — an
+    interpret-mode kernel is a correctness tool, not a fast path, so on
+    CPU/GPU the round runs the fused-jnp twins instead."""
+    return not interpret_mode()
+
+
+def round_stats(deltas, g, payload=None):
+    """Fused eq.-25 round stats over a params pytree (raveled = single
+    (K, D) leaf): ``(dots, dn2, pn2 | None, gn2)`` in one sweep.
+
+    Compiled Pallas kernel per leaf on TPU; the chunked-jnp twin
+    elsewhere (same contract, same f32 accumulation — the interpret-mode
+    kernel stays a test-only oracle check, per the interpret_mode
+    policy)."""
+    if not kernels_compiled():
+        return round_stats_jnp(deltas, g, payload)
+    d_leaves = jax.tree_util.tree_leaves(deltas)
+    g_leaves = jax.tree_util.tree_leaves(g)
+    p_leaves = (jax.tree_util.tree_leaves(payload) if payload is not None
+                else [None] * len(d_leaves))
+    dots = dn2 = pn2 = gn2 = None
+    for dl, plf, gl in zip(d_leaves, p_leaves, g_leaves):
+        d2 = dl.reshape((dl.shape[0], -1))
+        p2 = None if plf is None else plf.reshape((plf.shape[0], -1))
+        stats, g2 = round_stats_pallas(d2, gl.reshape(-1), p2,
+                                       interpret=False)
+        if dots is None:
+            dots, dn2, gn2 = stats[:, 0], stats[:, 1], g2
+            pn2 = stats[:, 2] if payload is not None else None
+        else:
+            dots, dn2, gn2 = dots + stats[:, 0], dn2 + stats[:, 1], gn2 + g2
+            if payload is not None:
+                pn2 = pn2 + stats[:, 2]
+    return dots, dn2, pn2, gn2
+
+
+def superpose_normalize(stacked: jnp.ndarray, powers: jnp.ndarray,
+                        mask: jnp.ndarray, noise: jnp.ndarray,
+                        vs_min: float = 1e-12):
+    """Fused eq. (6)+(8) for one (K, D) leaf: (agg (D,) f32, raw varsigma).
+    Compiled kernel on TPU; f32-accumulating einsum elsewhere."""
+    if kernels_compiled():
+        return superpose_normalize_pallas(stacked, powers, mask, noise,
+                                          vs_min=vs_min, interpret=False)
+    # CPU/GPU twin: one einsum with f32 accumulation (the convert of a
+    # bf16 payload fuses into the contraction — no materialized f32 copy);
+    # for f32 payloads this is the exact historical op sequence.
+    bp = (powers * mask).astype(jnp.float32)
+    raw = jnp.sum(bp)
+    acc = jnp.einsum("k,kd->d", bp, stacked,
+                     preferred_element_type=jnp.float32)
+    agg = (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min)
+    return agg, raw
 
 
 def aircomp_sum(stacked: jnp.ndarray, bp: jnp.ndarray,

@@ -16,6 +16,31 @@ def aircomp_sum_ref(stacked: jnp.ndarray, bp: jnp.ndarray,
             + noise.astype(jnp.float32)) / varsigma
 
 
+def round_stats_ref(deltas: jnp.ndarray, g: jnp.ndarray,
+                    payload: jnp.ndarray | None = None):
+    """Oracle for the fused round-stats kernel: (stats, gn2) with stats
+    (K, 2) = [dot_k, ||delta_k||^2] (payload=None) or (K, 3) with
+    ||payload_k||^2 appended; gn2 = ||g||^2. All f32."""
+    d32 = deltas.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    cols = [d32 @ g32, jnp.sum(d32 * d32, axis=1)]
+    if payload is not None:
+        p32 = payload.astype(jnp.float32)
+        cols.append(jnp.sum(p32 * p32, axis=1))
+    return jnp.stack(cols, axis=1), jnp.sum(g32 * g32)
+
+
+def superpose_normalize_ref(stacked: jnp.ndarray, powers: jnp.ndarray,
+                            mask: jnp.ndarray, noise: jnp.ndarray,
+                            vs_min: float = 1e-12):
+    """Oracle for the fused superpose-and-normalize kernel:
+    ((sum_k b_k p_k x_k + noise) / max(sum bp, vs_min), sum bp)."""
+    bp = (powers * mask).astype(jnp.float32)
+    raw = jnp.sum(bp)
+    acc = jnp.einsum("k,kd->d", bp, stacked.astype(jnp.float32))
+    return (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min), raw
+
+
 def cosine_partials_ref(deltas: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
     d32 = deltas.astype(jnp.float32)
     dot = d32 @ g.astype(jnp.float32)

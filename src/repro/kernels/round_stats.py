@@ -1,0 +1,254 @@
+"""Fused round-stats kernel (TPU Pallas) + the jnp twin.
+
+Everything the PAOTA round's eq.-25 stage needs from the (K, d) delta
+plane — per-client dots with the global direction, per-client delta
+sq-norms, optionally per-client payload sq-norms for the power constraint
+(7), and the global-direction sq-norm — computed in ONE tiled sweep:
+
+    dot_k  = sum_d deltas[k, d] * g[d]
+    dn2_k  = sum_d deltas[k, d]^2
+    pn2_k  = sum_d payload[k, d]^2        (payload pass only)
+    gn2    = sum_d g[d]^2
+
+The naive composition (``client_dots`` + ``client_sq_norms`` +
+``client_sq_norms(payload)`` + ``global_sq_norm``) sweeps the K x d plane
+three times and the d vector twice; at transformer-scale d the round is
+memory-bound, so the fused form is the difference between one and three
+HBM passes per aggregation period.
+
+Two implementations, same contract:
+
+* ``round_stats_pallas`` — the TPU kernel: grid over d in BLOCK_D stripes,
+  K resident per stripe, f32 VMEM accumulators (revisited-output pattern,
+  like ``cosine_sim``). Inputs may be bf16; accumulation is always f32.
+* ``round_stats_jnp`` — the CPU/GPU twin: the dot is a matmul and each
+  sq-norm is a batched dot (``einsum kd,kd->k``) so NOTHING K x d ever
+  materializes (XLA-CPU lowers ``sum(x*x, -1)`` as a full materialized
+  square + reduce-window cascade — two extra plane sweeps per norm; the
+  batched dot streams once). An explicitly d-chunked ``lax.scan`` variant
+  (``chunk=``) exists for experimentation, but measured inside the
+  scanned round XLA's own fusion of the plain ops wins (dot operands
+  materialize per chunk), so the round core uses ``chunk=None``.
+
+``repro.kernels.ops.round_stats`` picks between them by backend;
+``repro.kernels.ref.round_stats_ref`` is the allclose oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_D = 512
+
+# d-chunk of the explicitly-chunked jnp variant. Leaves at or below this
+# size reduce in one shot with the historical ops (bit-identical
+# small-model trajectories); ``round_stats_jnp(chunk=...)`` can stream
+# larger leaves in CHUNK_D slices. The round core's default is chunk=None
+# (no explicit chunking): measured inside the scanned round, XLA's own
+# multi-output loop fusion of the plain reductions beats a hand-rolled
+# lax.scan whose dot operands must materialize per chunk — the explicit
+# form is kept for the kernel tests and for experimentation.
+CHUNK_D = 8192
+
+
+# ---------------------------------------------------------------------------
+# TPU kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(d_ref, g_ref, out_ref, gn2_ref):
+    i = pl.program_id(0)
+    x = d_ref[...].astype(jnp.float32)          # (K, BLOCK_D) deltas stripe
+    g = g_ref[...].astype(jnp.float32)          # (1, BLOCK_D)
+    dot = jax.lax.dot_general(x, g, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (K, 1)
+    dn2 = jnp.sum(x * x, axis=1, keepdims=True)                     # (K, 1)
+    partial = jnp.concatenate([dot, dn2], axis=1)                   # (K, 2)
+    gn2 = jnp.sum(g * g, axis=1, keepdims=True)                     # (1, 1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = partial
+        gn2_ref[...] = gn2
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[...] += partial
+        gn2_ref[...] += gn2
+
+
+def _kernel_payload(d_ref, p_ref, g_ref, out_ref, gn2_ref):
+    i = pl.program_id(0)
+    x = d_ref[...].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)          # (K, BLOCK_D) payload stripe
+    g = g_ref[...].astype(jnp.float32)
+    dot = jax.lax.dot_general(x, g, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    dn2 = jnp.sum(x * x, axis=1, keepdims=True)
+    pn2 = jnp.sum(p * p, axis=1, keepdims=True)
+    partial = jnp.concatenate([dot, dn2, pn2], axis=1)              # (K, 3)
+    gn2 = jnp.sum(g * g, axis=1, keepdims=True)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = partial
+        gn2_ref[...] = gn2
+
+    @pl.when(i != 0)
+    def _acc():
+        out_ref[...] += partial
+        gn2_ref[...] += gn2
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def round_stats_pallas(deltas: jnp.ndarray, g: jnp.ndarray,
+                       payload: jnp.ndarray | None = None, *,
+                       block_d: int = DEFAULT_BLOCK_D,
+                       interpret: bool = True):
+    """deltas: (K, D); g: (D,); payload: optional (K, D).
+
+    Returns ``(stats, gn2)`` where stats is (K, 2) ``[dot_k, dn2_k]`` (or
+    (K, 3) with ``pn2_k`` appended when ``payload`` is given) and gn2 is
+    the f32 scalar ``||g||^2`` — one streaming pass over every operand.
+    """
+    k, d = deltas.shape
+    pad = (-d) % block_d
+    if pad:
+        deltas = jnp.pad(deltas, ((0, 0), (0, pad)))
+        g = jnp.pad(g, (0, pad))
+        if payload is not None:
+            payload = jnp.pad(payload, ((0, 0), (0, pad)))
+    dp = d + pad
+    grid = (dp // block_d,)
+    stripe = pl.BlockSpec((k, block_d), lambda i: (0, i))
+    gspec = pl.BlockSpec((1, block_d), lambda i: (0, i))
+    ncol = 2 if payload is None else 3
+    out_specs = [pl.BlockSpec((k, ncol), lambda i: (0, 0)),   # revisited acc
+                 pl.BlockSpec((1, 1), lambda i: (0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((k, ncol), jnp.float32),
+                 jax.ShapeDtypeStruct((1, 1), jnp.float32)]
+    if payload is None:
+        stats, gn2 = pl.pallas_call(
+            _kernel, grid=grid, in_specs=[stripe, gspec],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(deltas, g[None, :])
+    else:
+        stats, gn2 = pl.pallas_call(
+            _kernel_payload, grid=grid, in_specs=[stripe, stripe, gspec],
+            out_specs=out_specs, out_shape=out_shape, interpret=interpret,
+        )(deltas, payload, g[None, :])
+    return stats, gn2[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# chunked-jnp twin (CPU/GPU fast path; also the interpret-free fallback)
+# ---------------------------------------------------------------------------
+
+def _leaf2d(x):
+    return x.reshape((x.shape[0], -1))
+
+
+def _small_leaf_stats(d2, p2, g1):
+    """Single-shot per-leaf stats. The row sq-norms are batched dots
+    (``einsum kd,kd->k``), NOT ``sum(x*x, -1)``: XLA-CPU lowers the
+    latter as a materialized (K, d) square followed by a reduce-window
+    cascade — a full extra HBM write+read of the plane per norm — while
+    a batched dot contracts in one streaming pass (this was worth ~2
+    plane-sweeps per round at transformer-scale d, see EXPERIMENTS.md
+    §Round perf)."""
+    d32 = d2.astype(jnp.float32)
+    g32 = g1.astype(jnp.float32)
+    dot = d32 @ g32
+    dn2 = jnp.einsum("kd,kd->k", d32, d32)
+    out = (dot, dn2)
+    if p2 is not None:
+        p32 = p2.astype(jnp.float32)
+        out += (jnp.einsum("kd,kd->k", p32, p32),)
+    return out + (jnp.sum(g32 * g32),)   # (d,)-sized: reduce is fine
+
+
+def _chunked_leaf_stats(d2, p2, g1, chunk: int):
+    """One lax.scan sweep over full d-chunks (+ a remainder tail): the
+    multi-output reduction stays in cache per chunk instead of re-reading
+    the leaf once per statistic. ``gn2`` reduces outside the scan — it
+    only sweeps the (d,) direction vector (negligible traffic), and a
+    scalar scan carry seeded from a constant trips shard_map's
+    replication checker (constant = replicated, accumulated = shard-
+    tagged)."""
+    k, n = d2.shape
+    n_full = n // chunk
+    has_payload = p2 is not None
+
+    def body(carry, i):
+        off = i * chunk
+        dc = jax.lax.dynamic_slice(d2, (0, off), (k, chunk)).astype(
+            jnp.float32)
+        gc = jax.lax.dynamic_slice(g1, (off,), (chunk,)).astype(jnp.float32)
+        dot, dn2, pn2 = carry
+        dot = dot + dc @ gc
+        dn2 = dn2 + jnp.einsum("kd,kd->k", dc, dc)
+        if has_payload:
+            pc = jax.lax.dynamic_slice(p2, (0, off), (k, chunk)).astype(
+                jnp.float32)
+            pn2 = pn2 + jnp.einsum("kd,kd->k", pc, pc)
+        return (dot, dn2, pn2), None
+
+    z = jnp.zeros((k,), jnp.float32)
+    (dot, dn2, pn2), _ = jax.lax.scan(body, (z, z, z), jnp.arange(n_full))
+    tail = n - n_full * chunk
+    if tail:
+        dt = d2[:, n_full * chunk:].astype(jnp.float32)
+        gt = g1[n_full * chunk:].astype(jnp.float32)
+        dot = dot + dt @ gt
+        dn2 = dn2 + jnp.einsum("kd,kd->k", dt, dt)
+        if has_payload:
+            pt = p2[:, n_full * chunk:].astype(jnp.float32)
+            pn2 = pn2 + jnp.einsum("kd,kd->k", pt, pt)
+    g32 = g1.astype(jnp.float32)
+    gn2 = jnp.sum(g32 * g32)
+    out = (dot, dn2)
+    if has_payload:
+        out += (pn2,)
+    return out + (gn2,)
+
+
+def _leaf_stats(dl, plf, gl, chunk):
+    d2, g1 = _leaf2d(dl), gl.reshape(-1)
+    p2 = None if plf is None else _leaf2d(plf)
+    if chunk is None or d2.shape[1] <= chunk:
+        return _small_leaf_stats(d2, p2, g1)
+    return _chunked_leaf_stats(d2, p2, g1, chunk)
+
+
+def round_stats_jnp(deltas, g, payload=None, *, chunk: int | None = None):
+    """Pytree-generic fused round stats, pure jnp.
+
+    ``deltas``: pytree of client-stacked (K, ...) leaves (a bare (K, D)
+    matrix is the raveled single-leaf case); ``g``: the matching global-
+    direction pytree / (D,) vector; ``payload``: optional pytree congruent
+    with ``deltas`` whose per-client sq-norms are wanted too.
+
+    Returns ``(dots, dn2, pn2 | None, gn2)`` — (K,) f32 vectors plus the
+    f32 scalar ``||g||^2`` — accumulated across leaves in tree_flatten
+    order (shard-local under a client mesh axis: every reduction runs
+    over the model dims, which each shard holds whole).
+    """
+    d_leaves = jax.tree_util.tree_leaves(deltas)
+    g_leaves = jax.tree_util.tree_leaves(g)
+    p_leaves = (jax.tree_util.tree_leaves(payload) if payload is not None
+                else [None] * len(d_leaves))
+    dots = dn2 = pn2 = gn2 = None
+    for dl, plf, gl in zip(d_leaves, p_leaves, g_leaves):
+        part = _leaf_stats(dl, plf, gl, chunk)
+        if dots is None:
+            dots, dn2 = part[0], part[1]
+            pn2 = part[2] if payload is not None else None
+            gn2 = part[-1]
+        else:
+            dots, dn2 = dots + part[0], dn2 + part[1]
+            if payload is not None:
+                pn2 = pn2 + part[2]
+            gn2 = gn2 + part[-1]
+    return dots, dn2, pn2, gn2

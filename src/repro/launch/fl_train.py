@@ -23,6 +23,11 @@ clients; see EXPERIMENTS.md §Sharded PAOTA round).
 as its native params pytree instead of a raveled vector (EXPERIMENTS.md
 §Pytree round core) — the path that places transformer/MoE client leaves
 via ``repro.sharding.rules.stack_client_specs``.
+
+``--pending-dtype bfloat16`` stores the fused/sharded carry's (K, ...)
+pending/delta planes in bf16 — half the K x d working set for giant-model
+clients; every reduction accumulates f32 and the globals stay f32
+(EXPERIMENTS.md §Round perf).
 """
 from examples.fl_noniid_mnist import main
 

@@ -29,8 +29,34 @@ def test_diff_flags_only_real_regressions(tmp_path):
     report, regressions = diff_artifacts(
         load_artifacts(str(base)), load_artifacts(str(cur)),
         ratio=2.0, min_us=1000.0)
-    assert len(report) == 3
+    assert len(report) == 4
     assert [(a, n) for a, n, *_ in regressions] == [("roundbench", "big")]
+    new = [r for r in report if r[1] == "new_row"]
+    assert len(new) == 1 and new[0][-1] == "new (no baseline)"
+
+
+def test_diff_tolerates_newly_added_series(tmp_path):
+    """A brand-new artifact (or row) with no baseline must be reported as
+    new, never failed — first introduction of a tracked series."""
+    base, cur = tmp_path / "base", tmp_path / "cur"
+    base.mkdir(), cur.mkdir()
+    # "ratio" is a pre-existing 0-value sentinel row (speedup ratios are
+    # encoded in `derived`, us_per_call=0): never comparable, never "new"
+    _write(base, "old", [{"name": "r", "us_per_call": 10_000.0},
+                         {"name": "ratio", "us_per_call": 0.0}])
+    _write(cur, "old", [{"name": "r", "us_per_call": 11_000.0},
+                        {"name": "ratio", "us_per_call": 0.0}])
+    _write(cur, "brand_new", [{"name": "a", "us_per_call": 99_000.0},
+                              {"name": "b", "us_per_call": 1.0}])
+    report, regressions = diff_artifacts(
+        load_artifacts(str(base)), load_artifacts(str(cur)),
+        ratio=2.0, min_us=1000.0)
+    assert not regressions
+    flags = {(a, n): f for a, n, _, _, _, f in report}
+    assert flags[("brand_new", "a")] == "new (no baseline)"
+    assert flags[("brand_new", "b")] == "new (no baseline)"
+    assert ("old", "ratio") not in flags
+    assert main(["--baseline", str(base), "--current", str(cur)]) == 0
 
 
 def test_diff_skips_cross_environment_baselines(tmp_path):

@@ -1,0 +1,290 @@
+"""PR-5 delta-plane tests: fused round-stats + superpose-and-normalize
+kernels vs the ref.py oracles (interpret mode on CPU), the chunked-jnp
+twin, bf16 pending storage error bounds, and donation safety."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.aircomp_sum import superpose_normalize_pallas
+from repro.kernels.round_stats import round_stats_jnp, round_stats_pallas
+
+RNG = np.random.default_rng(7)
+
+
+def _assert_stats_close(got, want, rtol=3e-5, atol=3e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# round-stats kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,d", [(4, 64), (37, 1111), (100, 8070), (1, 513)])
+@pytest.mark.parametrize("with_payload", [False, True])
+def test_round_stats_kernel_sweep(k, d, with_payload):
+    de = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    p = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32) \
+        if with_payload else None
+    stats, gn2 = round_stats_pallas(de, g, p, interpret=True)
+    want, wgn2 = ref.round_stats_ref(de, g, p)
+    assert stats.shape == (k, 3 if with_payload else 2)
+    _assert_stats_close(stats, want)
+    assert float(gn2) == pytest.approx(float(wgn2), rel=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_round_stats_kernel_bf16_accumulates_f32(dtype):
+    """bf16 storage in, f32 stats out — the kernel upcasts per stripe."""
+    k, d = 16, 2048
+    de = jnp.asarray(0.01 * RNG.normal(size=(k, d)), dtype)
+    p = jnp.asarray(RNG.normal(size=(k, d)), dtype)
+    g = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    stats, gn2 = round_stats_pallas(de, g, p, interpret=True)
+    assert stats.dtype == jnp.float32
+    want, _ = ref.round_stats_ref(de.astype(jnp.float32), g,
+                                  p.astype(jnp.float32))
+    _assert_stats_close(stats, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("chunk", [None, 64, 1000])
+def test_round_stats_jnp_chunked_matches_ref(chunk):
+    """The chunked-jnp twin equals the oracle for chunk sizes below,
+    at, and above the leaf size."""
+    k, d = 13, 777
+    de = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    p = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    dots, dn2, pn2, gn2 = round_stats_jnp(de, g, p, chunk=chunk)
+    want, wgn2 = ref.round_stats_ref(de, g, p)
+    _assert_stats_close(jnp.stack([dots, dn2, pn2], 1), want, rtol=1e-5)
+    assert float(gn2) == pytest.approx(float(wgn2), rel=1e-5)
+
+
+def test_round_stats_jnp_pytree_accumulates_leaves():
+    """Tree stats == stats of the raveled concatenation (same model,
+    different leaf split) up to float regrouping."""
+    k = 9
+    tree_d = {"a": (k, 33), "b": (k, 8, 16), "c": (k, 5)}
+    de = {n: jnp.asarray(RNG.normal(size=s), jnp.float32)
+          for n, s in tree_d.items()}
+    g = {n: jnp.asarray(RNG.normal(size=s[1:]), jnp.float32)
+         for n, s in tree_d.items()}
+    dots, dn2, pn2, gn2 = round_stats_jnp(de, g, de)
+    flat_de = jnp.concatenate(
+        [l.reshape(k, -1) for l in jax.tree_util.tree_leaves(de)], 1)
+    flat_g = jnp.concatenate(
+        [l.reshape(-1) for l in jax.tree_util.tree_leaves(g)])
+    want, wgn2 = ref.round_stats_ref(flat_de, flat_g, flat_de)
+    _assert_stats_close(jnp.stack([dots, dn2, pn2], 1), want, rtol=1e-5)
+    assert float(gn2) == pytest.approx(float(wgn2), rel=1e-5)
+    np.testing.assert_allclose(np.asarray(dn2), np.asarray(pn2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# superpose-and-normalize kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,d", [(4, 64), (37, 1111), (100, 8070)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_superpose_normalize_sweep(k, d, dtype):
+    x = jnp.asarray(RNG.normal(size=(k, d)), dtype)
+    powers = jnp.asarray(RNG.random(k), jnp.float32)
+    mask = jnp.asarray(RNG.random(k) < 0.6, jnp.float32)
+    n = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    agg, vs = superpose_normalize_pallas(x, powers, mask, n, interpret=True)
+    want, wvs = ref.superpose_normalize_ref(x, powers, mask, n)
+    assert agg.dtype == jnp.float32
+    tol = dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want), **tol)
+    assert float(vs) == pytest.approx(float(wvs), abs=1e-6)
+
+
+def test_superpose_normalize_masked_phantom_rows():
+    """Masked (phantom) rows never leak into the aggregate, no matter how
+    large their stale payload values are."""
+    k, d = 8, 512
+    x = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    x = x.at[3].set(1e30).at[6].set(-1e30)          # phantom garbage rows
+    powers = jnp.ones((k,), jnp.float32)
+    mask = jnp.asarray([1, 1, 0, 0, 1, 0, 0, 1], jnp.float32)
+    n = jnp.zeros((d,), jnp.float32)
+    agg, vs = superpose_normalize_pallas(x, powers, mask, n, interpret=True)
+    want = (x[0] + x[1] + x[4] + x[7]) / 4.0
+    assert float(vs) == pytest.approx(4.0)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want), rtol=2e-6,
+                               atol=2e-6)
+
+
+def test_superpose_normalize_zero_uploaders():
+    """A zero-uploader period returns raw varsigma 0 (the guard signal)
+    and a pure clamped-noise aggregate — the caller's guard discards it."""
+    k, d = 5, 256
+    x = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    powers = jnp.asarray(RNG.random(k), jnp.float32)
+    mask = jnp.zeros((k,), jnp.float32)
+    n = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    agg, vs = superpose_normalize_pallas(x, powers, mask, n, interpret=True)
+    assert float(vs) == 0.0
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(n) / 1e-12,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# round-level: one-sweep factors == the composed stage ops
+# ---------------------------------------------------------------------------
+
+def test_round_factors_matches_composed_ops():
+    from repro.core.power_control import (client_dots, client_sq_norms,
+                                          cosine_similarity,
+                                          similarity_factor,
+                                          staleness_factor)
+    from repro.fl.runtime import round_factors
+    k, d = 23, 4097
+    deltas = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    pending = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    prev = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    stal = jnp.asarray(RNG.integers(0, 5, k), jnp.float32)
+    rho, theta, w2 = round_factors(deltas, pending, g, prev, stal, 3.0)
+    cos = cosine_similarity(deltas, g - prev)
+    np.testing.assert_allclose(np.asarray(theta),
+                               np.asarray(similarity_factor(cos)), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(rho),
+                               np.asarray(staleness_factor(stal, 3.0)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2),
+                               np.asarray(client_sq_norms(pending)),
+                               rtol=1e-6)
+    # transmit='delta': payload norms must be the delta norms, not re-swept
+    _, _, w2d = round_factors(deltas, None, g, prev, stal, 3.0)
+    np.testing.assert_allclose(np.asarray(w2d),
+                               np.asarray(client_sq_norms(deltas)),
+                               rtol=1e-6)
+
+
+def test_round_factors_zero_direction_gives_half_theta():
+    """w_g == w_g^{t-1} (e.g. after a held round): cos must be exactly 0,
+    theta exactly 1/2 — no NaN from the 0/0."""
+    from repro.fl.runtime import round_factors
+    k, d = 7, 129
+    deltas = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    stal = jnp.zeros((k,), jnp.float32)
+    rho, theta, _ = round_factors(deltas, None, g, g, stal, 3.0)
+    np.testing.assert_array_equal(np.asarray(theta), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# bf16 pending storage + donation safety (driver level)
+# ---------------------------------------------------------------------------
+
+def _tiny_server(pending_dtype="float32", donate=True, seed=0, k=12):
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.data.partition import partition_noniid
+    from repro.data.pipeline import build_federation
+    from repro.data.synthetic import make_mnist_like
+    from repro.fl import BatchedEngine, FusedPAOTA, PAOTAConfig
+    from repro.models.mlp import init_mlp_params, mlp_loss
+    x, y, _, _ = make_mnist_like(n_train=600, n_test=10, seed=1234)
+    parts = partition_noniid(y, n_clients=k, sizes=(16, 24), seed=seed)
+    fed = build_federation(x, y, parts, seed=seed)
+    eng = BatchedEngine(fed, mlp_loss, batch_size=8, lr=0.1, local_steps=2)
+    params = init_mlp_params(jax.random.PRNGKey(seed))
+    return FusedPAOTA(params, eng, ChannelConfig(),
+                      SchedulerConfig(n_clients=k, seed=seed),
+                      PAOTAConfig(seed=seed), pending_dtype=pending_dtype,
+                      donate=donate)
+
+
+def test_bf16_pending_tracks_f32_trajectory():
+    """Property: the bf16 storage cast is a RELATIVE rounding (~2^-8) of
+    the stored planes, not a cancellation. After one aggregation the
+    global must sit within a rounding-scaled envelope of the f32 result;
+    over more rounds the trajectories drift (SGD amplifies the rounding)
+    but must stay finite with identical participation patterns (the
+    scheduler never sees the planes)."""
+    f32 = _tiny_server("float32")
+    b16 = _tiny_server("bfloat16")
+    # first aggregation with >=1 uploader: one storage-rounding step
+    rows_f, rows_b = f32.advance(2), b16.advance(2)
+    gf, gb = f32.global_vec, b16.global_vec
+    assert any(r["n_participants"] > 0 for r in rows_f)
+    scale = float(np.max(np.abs(gf)))
+    assert float(np.max(np.abs(gf - gb))) < 0.02 * scale
+    rows_f, rows_b = f32.advance(4), b16.advance(4)
+    for rf, rb in zip(rows_f, rows_b):
+        assert rf["n_participants"] == rb["n_participants"]
+        assert rf["time"] == rb["time"]
+    assert np.isfinite(b16.global_vec).all()
+    # the carry planes really are stored in bf16, the globals in f32
+    assert b16._carry.pending.dtype == jnp.bfloat16
+    assert b16._carry.deltas.dtype == jnp.bfloat16
+    assert b16._carry.global_vec.dtype == jnp.float32
+
+
+@pytest.mark.multidevice
+def test_bf16_sharded_global_stays_f32(client_mesh_8):
+    """The sharded psum aggregation must return f32 aggregates for a bf16
+    carry — only the stored planes are rounded, never the global update
+    (regression: the psum entries used to cast the aggregate back to the
+    payload dtype, quantizing w_g to bf16 every round)."""
+    from repro.core import ChannelConfig, SchedulerConfig
+    from repro.data.partition import partition_noniid
+    from repro.data.pipeline import build_federation
+    from repro.data.synthetic import make_mnist_like
+    from repro.fl import BatchedEngine, FusedPAOTA, PAOTAConfig, ShardedPAOTA
+    from repro.models.mlp import init_mlp_params, mlp_loss
+
+    def build(cls, **kw):
+        x, y, _, _ = make_mnist_like(n_train=800, n_test=10, seed=1234)
+        parts = partition_noniid(y, n_clients=16, sizes=(16, 24), seed=0)
+        eng = BatchedEngine(build_federation(x, y, parts, seed=0), mlp_loss,
+                            batch_size=8, lr=0.1, local_steps=2)
+        return cls(init_mlp_params(jax.random.PRNGKey(0)), eng,
+                   ChannelConfig(), SchedulerConfig(n_clients=16, seed=0),
+                   PAOTAConfig(seed=0), pending_dtype="bfloat16", **kw)
+
+    fused = build(FusedPAOTA)
+    shard = build(ShardedPAOTA, mesh=client_mesh_8)
+    rows_f, rows_s = fused.advance(4), shard.advance(4)
+    assert any(r["n_participants"] > 0 for r in rows_f)
+    for rf, rs in zip(rows_f, rows_s):
+        assert rf["n_participants"] == rs["n_participants"]
+    assert shard._carry.global_vec.dtype == jnp.float32
+    assert shard._carry.pending.dtype == jnp.bfloat16
+    gf, gs = fused.global_vec, shard.global_vec
+    # full precision: NOT bf16-quantized (a bf16 roundtrip would be exact)
+    assert not np.array_equal(
+        gs, np.asarray(jnp.asarray(gs).astype(jnp.bfloat16).astype(
+            jnp.float32)))
+    np.testing.assert_allclose(gf, gs, rtol=2e-3, atol=2e-3)
+
+
+def test_donation_safe():
+    """Donating the round carry into the scan must not change a single
+    bit of the trajectory (the donated buffers are never re-read)."""
+    don = _tiny_server(donate=True)
+    ref_srv = _tiny_server(donate=False)
+    for _ in range(3):
+        rd, rr = don.advance(2), ref_srv.advance(2)
+        for a, b in zip(rd, rr):
+            assert a == b, (a, b)
+    np.testing.assert_array_equal(don.global_vec, ref_srv.global_vec)
+
+
+def test_donation_buffers_actually_donated():
+    """The scan jit really declares the carry donated (guards against the
+    flag silently regressing to a copy)."""
+    srv = _tiny_server(donate=True)
+    srv.advance(1)
+    carry = srv._carry
+    srv.advance(1)
+    # the old carry's buffers were handed to XLA; their jax view must be
+    # marked deleted (donated), not silently copied
+    assert carry.pending.is_deleted()
+    assert carry.deltas.is_deleted()
