@@ -86,6 +86,11 @@ class BenchSetting:
                                  # (K, ...) planes: "bfloat16" halves the
                                  # working set (f32 accumulation; globals
                                  # stay f32)
+    group_period: int = 0        # sharded only: grouped aggregation window
+                                 # N (0 = flat; N >= 1 = intra-pod psums
+                                 # every period, ONE cross-pod psum per N
+                                 # periods; the trajectory advances in
+                                 # whole windows)
 
     @classmethod
     def from_env(cls, **kw):
@@ -129,10 +134,13 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
             # solvers they cannot run rather than silently substituting
             from repro.fl import ShardedPAOTA
             cls = ShardedPAOTA if s.engine == "sharded" else FusedPAOTA
+            kw = {}
+            if s.engine == "sharded" and s.group_period:
+                kw["group_period"] = s.group_period
             srv = cls(params, clients, chan, sched,
                       PAOTAConfig(solver=s.solver, seed=s.seed),
                       params_mode=s.params_mode,
-                      pending_dtype=s.pending_dtype)
+                      pending_dtype=s.pending_dtype, **kw)
         else:
             srv = PAOTAServer(params, clients, chan, sched,
                               PAOTAConfig(solver=s.solver, seed=s.seed,
@@ -150,8 +158,18 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
 
     rows = []
     t0 = time.time()
+    grouped = (name == "paota" and s.engine == "sharded"
+               and s.group_period > 1)
+    pending: List[Dict] = []
     for r in range(s.n_rounds):
-        info = srv.round()
+        if grouped:
+            # grouped aggregation advances in whole windows; buffer the
+            # window's per-round rows and drain one per loop iteration
+            if not pending:
+                pending = list(srv.advance(s.group_period))
+            info = pending.pop(0)
+        else:
+            info = srv.round()
         if r % s.eval_every == 0 or r == s.n_rounds - 1:
             gp = srv.global_params()
             ev = evaluate(gp, x_te, y_te, mlp_apply)

@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
              delta transmit (d ~= 55k MLP, 1 local step — data-plane bound)
   sharded_round — fused 1-device vs shard_map'd 8-device PAOTA rounds/sec
              (K up to 10000; runs in a subprocess with forced host devices)
+  grouped_round — multi-pod grouped aggregation: K=10000 on the forced
+             512-device (2, 256) pod mesh, dryrun lower+compile + the
+             one-cross-pod-psum-per-window compiled-HLO collective check
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
@@ -30,13 +33,15 @@ import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
            "fused_round_bench", "round_perf_bench", "sharded_round_bench",
-           "fig3", "fig4", "table1", "ablation"]
+           "grouped_round_bench", "fig3", "fig4", "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
            "fused_round": "fused_round_bench", "fused": "fused_round_bench",
            "round_perf": "round_perf_bench",
            "sharded_round": "sharded_round_bench",
-           "sharded": "sharded_round_bench"}
+           "sharded": "sharded_round_bench",
+           "grouped_round": "grouped_round_bench",
+           "grouped": "grouped_round_bench"}
 
 
 def main() -> None:

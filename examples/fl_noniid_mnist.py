@@ -41,6 +41,12 @@ def main():
                          "working set (f32 accumulation everywhere; the "
                          "globals stay f32) — footprint opt-in for "
                          "giant-model clients")
+    ap.add_argument("--group-period", type=int, default=0,
+                    help="sharded only: grouped aggregation window N on a "
+                         "('pod', 'data') mesh — intra-pod psums every "
+                         "period, ONE cross-pod model-sized psum per N "
+                         "periods (0 = flat; the trajectory advances in "
+                         "whole windows)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
@@ -48,7 +54,8 @@ def main():
                               n0_dbm_hz=args.n0, solver=args.solver,
                               engine=args.engine,
                               params_mode=args.params_mode,
-                              pending_dtype=args.pending_dtype)
+                              pending_dtype=args.pending_dtype,
+                              group_period=args.group_period)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

@@ -74,6 +74,21 @@ names = [r["name"] for r in art["rows"]]
 assert any("sharded_k16" in n for n in names), names
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
+
+    # grouped-round smoke: K=16 on the forced 8-device (2, 4) pod mesh —
+    # flat vs grouped window scans plus the compiled-HLO collective check
+    # (exactly ONE cross-pod model-sized all-reduce per window)
+    rm -f "$BENCH_OUT/BENCH_grouped_round_smoke.json"
+    python -m benchmarks.grouped_round_bench smoke
+    python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_grouped_round_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("grouped_n2_k16" in n for n in names), names
+assert any("cross_pod_big_allreduce_per_window=1" in r.get("derived", "")
+           for r in art["rows"]), art["rows"]
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
+EOF
 fi
 
 # perf trajectory gate: every artifact the smokes regenerated must stay

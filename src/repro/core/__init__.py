@@ -8,7 +8,8 @@ from repro.core.aircomp import (VARSIGMA_MIN, ChannelConfig,  # noqa: F401
                                 sample_channel_gains)
 from repro.core.aggregation import (exact_average, guarded_global_update,  # noqa: F401
                                     paota_aggregate_stacked, paota_allreduce,
-                                    ravel)
+                                    paota_finalize_stacked,
+                                    paota_partial_stacked, ravel)
 from repro.core.convergence import BoundConstants, contraction_A, gap_G  # noqa: F401
 from repro.core.dinkelbach import solve_p2  # noqa: F401
 from repro.core.power_control import (P2Problem, build_p2, cosine_similarity,  # noqa: F401
@@ -16,4 +17,4 @@ from repro.core.power_control import (P2Problem, build_p2, cosine_similarity,  #
                                       similarity_factor, staleness_factor)
 from repro.core.scheduler import (SchedulerConfig, SemiAsyncScheduler,  # noqa: F401
                                   counter_latencies, round_tag_key,
-                                  sched_advance, sched_broadcast)
+                                  sched_advance, sched_broadcast, slot_ready)

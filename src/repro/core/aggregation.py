@@ -144,6 +144,44 @@ def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
     return jax.tree_util.tree_unflatten(treedef, agg), varsigma
 
 
+def paota_partial_stacked(stacked_models, powers: jnp.ndarray,
+                          mask: jnp.ndarray, axis_name=None) -> jnp.ndarray:
+    """Grouped-aggregation half of eq. (8): the superposition PARTIAL of
+    this shard's clients — the flattened per-leaf contractions of
+    ``paota_aggregate_stacked`` with the varsigma partial appended, one
+    (d_total + 1,) f32 vector — without noise or normalization.
+
+    ``axis_name`` optionally reduces over a SUBSET of the client axes
+    (the intra-pod psum that fires every period); the remaining reduction,
+    the AWGN, and the eq.-8 division happen once at the window sync
+    (``paota_finalize_stacked``). Masked clients (b_k = 0) contribute
+    exact zeros, so a pod with no uploaders holds a bit-exactly-zero
+    partial."""
+    from repro.kernels.aircomp_sum import aircomp_partial_tree
+    leaves, _ = jax.tree_util.tree_flatten(stacked_models)
+    return aircomp_partial_tree(leaves, powers * mask, axis_name=axis_name)
+
+
+def paota_finalize_stacked(flat: jnp.ndarray, stacked_models, key,
+                           sigma_n: float, axis_name=None):
+    """Finish a grouped AirComp window from its accumulated flat partial:
+    the final psum over ``axis_name`` (the ONE cross-pod collective of the
+    window), then the same single flat AWGN realization
+    (``stacked_tree_noise`` — identical draw to the flat path's) joins the
+    f32 accumulator once before the varsigma clamp + normalization.
+    ``stacked_models`` supplies the leaf shapes only.
+
+    Returns (aggregate pytree / (D,) vector, varsigma) — the exact shapes
+    ``paota_aggregate_stacked`` returns, so the round update downstream is
+    shared."""
+    from repro.kernels.aircomp_sum import aircomp_finalize_tree
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_models)
+    noise = stacked_tree_noise(key, leaves, sigma_n)
+    agg_leaves, varsigma = aircomp_finalize_tree(
+        flat, leaves, noise, axis_name=axis_name, varsigma_min=VARSIGMA_MIN)
+    return jax.tree_util.tree_unflatten(treedef, agg_leaves), varsigma
+
+
 def paota_allreduce(local_payload, power: jnp.ndarray, ready: jnp.ndarray,
                     axis_name, noise_key, sigma_n: float):
     """Inside shard_map: each participant holds `local_payload` (pytree),

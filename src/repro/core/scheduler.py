@@ -13,8 +13,12 @@ baselines the round time is max over participating clients (bottleneck
 node) — that asymmetry is exactly what Table I measures.
 
 ``SemiAsyncScheduler`` keeps the whole client state as numpy arrays
-(ready bits, busy-until clocks, model rounds) so a 1000+-client round is
-a handful of vector ops. ``ScalarSemiAsyncScheduler`` is the seed's
+(ready bits, session latency draws, model rounds) so a 1000+-client round
+is a handful of vector ops. Training-finished is decided by the EXACT
+relative predicate ``slot_ready`` — lat <= (rounds elapsed) * delta_t,
+one float rounding in the draw's own dtype — never by accumulating an
+absolute clock, so the host (f64 clock) and the fused f32 scan produce
+bit-identical ready masks at any horizon (tests/test_slot_clock.py). ``ScalarSemiAsyncScheduler`` is the seed's
 per-client-loop implementation, kept as the reference: both consume the
 PCG64 stream identically (one uniform per broadcast client, in id order),
 so they match draw-for-draw (tests/test_scheduler_vectorized.py).
@@ -29,7 +33,7 @@ consumer) also keys the server's channel/noise/minibatch draws.
 
 The module additionally provides the scheduler state-transition as pure
 ``jnp`` functions (``sched_advance`` / ``sched_broadcast``) over array
-state (``ready``, ``busy_until``, ``model_round``) — the jit-traceable
+state (``ready``, ``busy_lat``, ``model_round``) — the jit-traceable
 form the fused round scans over.
 """
 from __future__ import annotations
@@ -65,37 +69,58 @@ def counter_latencies(base_key, round_idx, k: int, lo: float, hi: float):
 # pure-jnp scheduler state transition (fused-round building blocks)
 # ---------------------------------------------------------------------------
 
-def sched_advance(ready, busy_until, model_round, time, round_idx):
-    """jnp form of ``advance_to_aggregation``: at aggregation-slot ``time``
-    flip ready bits for clients whose training finished, and compute the
-    per-client staleness s_k = round - model_round (0 for busy clients).
+def slot_ready(lat, model_round, round_idx, delta_t):
+    """Exact slot-boundary predicate, shared by the host schedulers and the
+    fused/sharded round: a client broadcast at round j with latency draw
+    ``lat`` has finished by the aggregation slot of round ``round_idx``
+    (wall clock (round_idx + 1) * delta_t, broadcast clock j * delta_t) iff
 
-    ``time`` is the already-advanced slot clock — callers compute it as
-    (round+1) * delta_t rather than accumulating +=, so a float32 clock
-    cannot drift from a float64 one over long scans. Returns
+        lat <= (round_idx + 1 - j) * delta_t .
+
+    The relative form has ONE float rounding — the small-integer product —
+    in ``lat``'s own dtype, instead of comparing absolute clocks whose f32
+    rounding (ulp of t * delta_t) grows with the horizon and eventually
+    flips boundaries against the host's f64 clock. Evaluated over f32
+    arrays on device and over the same-dtype numpy arrays on the host, the
+    comparison is bit-identical (same IEEE multiply, same inputs), for any
+    delta_t and any horizon with round counts < 2^24."""
+    m = (round_idx + 1) - model_round
+    if isinstance(lat, np.ndarray):
+        return lat <= m.astype(lat.dtype) * lat.dtype.type(delta_t)
+    return lat <= m.astype(lat.dtype) * jnp.asarray(delta_t, lat.dtype)
+
+
+def sched_advance(ready, busy_lat, model_round, round_idx, delta_t):
+    """jnp form of ``advance_to_aggregation``: at the aggregation slot of
+    round ``round_idx`` flip ready bits for clients whose training finished
+    (the exact ``slot_ready`` predicate over the carried latency draws —
+    no absolute-clock accumulation), and compute the per-client staleness
+    s_k = round - model_round (0 for busy clients). Returns
     (ready, staleness); the round counter itself is advanced by the caller
     (it lives in the scan carry)."""
-    ready = ready | (busy_until <= time)
+    ready = ready | slot_ready(busy_lat, model_round, round_idx, delta_t)
     stal = jnp.where(ready, round_idx - model_round, 0)
     return ready, stal
 
 
-def sched_broadcast(ready, busy_until, model_round, upl_mask, time, lat,
-                    new_round):
+def sched_broadcast(ready, busy_lat, model_round, upl_mask, lat, new_round):
     """jnp form of ``start_round``: clients under ``upl_mask`` receive the
-    new global model, go busy for their latency draw, and record the round
-    they now train on. Masked no-op for everyone else (and a full no-op
-    when the mask is empty — the zero-uploader round)."""
+    new global model, go busy for their latency draw (the raw draw is
+    carried — ``slot_ready`` anchors it to ``model_round``'s broadcast
+    slot), and record the round they now train on. Masked no-op for
+    everyone else (and a full no-op when the mask is empty — the
+    zero-uploader round)."""
     ready = jnp.where(upl_mask, False, ready)
-    busy_until = jnp.where(upl_mask, time + lat, busy_until)
+    busy_lat = jnp.where(upl_mask, lat, busy_lat)
     model_round = jnp.where(upl_mask, new_round, model_round)
-    return ready, busy_until, model_round
+    return ready, busy_lat, model_round
 
 
 @dataclass
 class ClientState:
     ready: bool = True            # b_k: finished, waiting for aggregation slot
-    busy_until: float = 0.0       # sim time when local training finishes
+    busy_lat: float = 0.0         # latency draw of the current session
+                                  # (finish slot via the slot_ready predicate)
     model_round: int = 0          # round of the global model it trains on
     staleness: int = 0            # s_k at upload time
 
@@ -121,7 +146,13 @@ class SemiAsyncScheduler:
         self.time = 0.0
         self.round = 0
         self.ready = np.ones(cfg.n_clients, dtype=bool)
-        self.busy_until = np.zeros(cfg.n_clients)
+        # the per-client latency draw of the current training session; the
+        # finish slot is the relative slot_ready predicate, never an
+        # accumulated absolute clock. Counter mode keeps the draws in their
+        # f32 draw dtype so the predicate is BIT-identical to the fused
+        # scan's (same IEEE ops, same inputs); host PCG64 mode stays f64.
+        lat_dtype = np.float32 if cfg.rng == "counter" else np.float64
+        self.busy_lat = np.zeros(cfg.n_clients, dtype=lat_dtype)
         self.model_round = np.zeros(cfg.n_clients, dtype=np.int64)
         self._jkey = (jax.random.PRNGKey(cfg.seed)
                       if cfg.rng == "counter" else None)
@@ -146,7 +177,7 @@ class SemiAsyncScheduler:
             lat = self._draw_latency(ids.size)
         self.ready[ids] = False
         self.model_round[ids] = self.round
-        self.busy_until[ids] = self.time + lat
+        self.busy_lat[ids] = lat
 
     def advance_to_aggregation(self) -> Tuple[np.ndarray, np.ndarray]:
         """Advance sim clock by delta_t; returns (uploaders, staleness array).
@@ -154,11 +185,13 @@ class SemiAsyncScheduler:
         uploaders: indices with b_k = 1 at the aggregation slot (finished
         local training during this period). staleness[k] = s_k^r.
         """
-        self.time += self.cfg.delta_t
-        self.ready |= self.busy_until <= self.time
+        self.ready |= np.asarray(slot_ready(self.busy_lat, self.model_round,
+                                            self.round, self.cfg.delta_t))
         stal = np.where(self.ready, self.round - self.model_round, 0)
         uploaders = np.flatnonzero(self.ready).astype(np.int64)
         self.round += 1
+        # drift-free clock (report-only): recomputed, never accumulated
+        self.time = self.round * self.cfg.delta_t
         return uploaders, stal.astype(np.int64)
 
     # ------------------------------------------------------------------
@@ -189,20 +222,22 @@ class ScalarSemiAsyncScheduler:
             c = self.clients[k]
             c.ready = False
             c.model_round = self.round
-            c.busy_until = self.time + float(self._draw_latency())
+            c.busy_lat = float(self._draw_latency())
 
     def advance_to_aggregation(self):
-        self.time += self.cfg.delta_t
         uploaders = []
         stal = np.zeros(self.cfg.n_clients, dtype=np.int64)
         for k, c in enumerate(self.clients):
-            if not c.ready and c.busy_until <= self.time:
+            done = (c.busy_lat
+                    <= (self.round + 1 - c.model_round) * self.cfg.delta_t)
+            if not c.ready and done:
                 c.ready = True
                 c.staleness = self.round - c.model_round
             if c.ready:
                 uploaders.append(k)
                 stal[k] = self.round - c.model_round
         self.round += 1
+        self.time = self.round * self.cfg.delta_t
         return np.array(uploaders, dtype=np.int64), stal
 
     def sync_round_time(self, n_participants: int) -> float:

@@ -71,7 +71,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (guarded_global_update,
-                                    paota_aggregate_stacked)
+                                    paota_aggregate_stacked,
+                                    paota_finalize_stacked,
+                                    paota_partial_stacked)
 from repro.core.aircomp import VARSIGMA_MIN, effective_power_cap
 from repro.core.boxqp import waterfill_beta_jnp
 from repro.core.power_control import (client_sq_norms, power_from_beta,
@@ -100,9 +102,16 @@ class RoundCarry(NamedTuple):
     replicated.
     """
     t: jnp.ndarray            # i32 — scheduler round counter
-    time: jnp.ndarray         # f32 — simulated clock (seconds)
+    time: jnp.ndarray         # f32 — simulated clock (seconds, report-only)
     ready: jnp.ndarray        # (K,) bool — b_k at the aggregation slot
-    busy_until: jnp.ndarray   # (K,) f32 — local-training completion times
+    busy_lat: jnp.ndarray     # (K,) f32 — latency draw of each client's
+                              # current training session; training-finished
+                              # is the exact relative slot predicate
+                              # lat <= (t+1 - model_round) * delta_t
+                              # (repro.core.scheduler.slot_ready — no
+                              # absolute-clock accumulation, so the f32
+                              # scan and the host's f64 clock agree
+                              # bit-for-bit at any horizon)
     model_round: jnp.ndarray  # (K,) i32 — round each client trains on
     global_vec: jnp.ndarray   # params pytree / (d,) — w_g^t
     prev_global: jnp.ndarray  # params pytree / (d,) — w_g^{t-1} (direction)
@@ -112,6 +121,14 @@ class RoundCarry(NamedTuple):
                               # the delta plane IS the whole carry, halving
                               # the K x d working set)
     deltas: jnp.ndarray       # (K, ...)-leaf pytree — pending - start model
+    held: jnp.ndarray = None  # grouped aggregation only (group_period >= 1):
+                              # (n_pod_groups, d_total + 1) f32 — the
+                              # staleness-weighted intra-pod superposition
+                              # partials (flattened leaf contractions + the
+                              # varsigma partial) accumulated since the last
+                              # cross-pod sync; sharded over the pod axes,
+                              # replicated intra-pod, zeroed at every sync.
+                              # None on the flat path.
 
 
 class RoundCfg(NamedTuple):
@@ -127,6 +144,23 @@ class RoundCfg(NamedTuple):
     pending_dtype: str = "float32"   # carry storage dtype for the (K, ...)
                               # planes: "float32" | "bfloat16" (opt-in
                               # half-footprint mode; f32 accumulation)
+    group_period: int = 0     # grouped aggregation window N (Air-FedGA
+                              # style): 0 = flat (cross-shard sync every
+                              # period); N >= 1 = intra-pod partials every
+                              # period, ONE cross-pod psum every N periods
+
+
+class GroupTopology(NamedTuple):
+    """Static mesh-axis split for grouped aggregation (trace-time only)."""
+    pod_axes: tuple           # client axes indexing the pod groups — the
+                              # cross-pod sync psums over these every
+                              # group_period periods
+    intra_axes: tuple         # client axes inside a pod — the per-period
+                              # partial superposition psums over these
+                              # (may be empty: every shard its own pod)
+    intra_shards: int         # prod of intra_axes extents — the held
+                              # partial's replication count, so the sync can
+                              # fold held/intra_shards into the all-axes psum
 
 
 class RoundStreams(NamedTuple):
@@ -213,30 +247,45 @@ def _cast_rows(tree, dtype):
 # ---------------------------------------------------------------------------
 
 def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
-                     streams: RoundStreams, axis_name=None):
+                     streams: RoundStreams, axis_name=None,
+                     grouping: GroupTopology | None = None,
+                     window_j: int = 0):
     """One PAOTA aggregation period as a pure function.
 
     ``axis_name=None`` is the single-device form. With a mesh axis name
     (or tuple of names), the (K,) / (K, d) carry rows are this shard's
     clients and the cross-client reductions go through collectives.
 
+    Grouped aggregation (``rcfg.group_period`` N >= 1 with a
+    ``grouping`` topology): ``window_j`` is this period's static position
+    in the window. Non-sync periods (j < N-1) reduce the superposition
+    over the intra-pod axes only and accumulate it into ``carry.held``
+    weighted by the eq.-25 staleness factor of its age at the sync,
+    rho(N-1-j) = Omega / (N-1-j + Omega) — the global model holds. The
+    sync period (j = N-1) folds the held window into ONE psum over ALL
+    client axes (held is intra-pod-replicated, so held/intra_shards under
+    the all-axes psum equals its cross-pod sum), adds the single AWGN
+    realization, normalizes, and applies the guarded update. At N=1 every
+    period is a sync with held == 0, and since x + 0 is exact the program
+    is op-for-op the flat path — grouped N=1 equals flat by construction.
+
     Returns (next_carry, per-round metrics dict of replicated scalars)."""
     k_local = carry.ready.shape[0]
+    grouped = grouping is not None and rcfg.group_period >= 1
+    sync = (not grouped) or (window_j == rcfg.group_period - 1)
 
     def ksum(v, axis=None):
         s = jnp.sum(v, axis=axis)
         return s if axis_name is None else jax.lax.psum(s, axis_name)
 
     # 1. scheduler advance: who finished inside this period, staleness.
-    # The slot clock is recomputed as (t+1) * delta_t rather than
-    # accumulated +=, so the float32 clock cannot drift from the host
-    # reference's float64 one over long scans (a `busy_until <= time`
-    # boundary flip would silently fork the trajectories; a residual
-    # single-rounding difference remains for delta_t values inexact in
-    # float32)
+    # The finished test is the exact relative slot predicate over the
+    # carried latency draws (repro.core.scheduler.slot_ready) — one f32
+    # rounding, bit-identical to the host reference's mask at any horizon;
+    # `time` is report-only.
     time = (carry.t + 1).astype(jnp.float32) * jnp.float32(rcfg.delta_t)
-    ready, stal = sched_advance(carry.ready, carry.busy_until,
-                                carry.model_round, time, carry.t)
+    ready, stal = sched_advance(carry.ready, carry.busy_lat,
+                                carry.model_round, carry.t, rcfg.delta_t)
     b = ready.astype(jnp.float32)
     stal = stal.astype(jnp.float32)
 
@@ -249,10 +298,14 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         carry.global_vec, carry.prev_global, stal, rcfg.omega)
 
     # 3. P2 -> beta -> powers (exact water-filling, pure jnp; the grid and
-    # golden-section reductions over K run as psums under sharding)
+    # golden-section reductions over K run as psums under sharding). At a
+    # grouped non-sync period only the pod's own clients superpose, so the
+    # P2 reductions stay intra-pod (per-pod water level) — no cross-pod
+    # collective outside the sync.
+    wf_axes = axis_name if sync else (grouping.intra_axes or None)
     p_max = jnp.full((k_local,), rcfg.p_max_watts, jnp.float32)
     beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b, rcfg.c1, rcfg.c0,
-                                      axis_name=axis_name)
+                                      axis_name=wf_axes)
     powers = power_from_beta(beta, rho, theta, p_max)
 
     # 4. instantaneous power constraint (7) under the sampled channel —
@@ -261,27 +314,53 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     powers = constraint7_powers(powers, payload, h, rcfg.p_max_watts,
                                 w_norm2=w_norm2)
 
-    # 5. AirComp superposition + AWGN + normalization (eqs. 6+8) in one
-    # fused pass (sweep 2 of 2) — the same jnp helper the host reference
-    # calls; under sharding the superposition is a psum over the client
-    # axis with the single shared noise realization joining once, after
-    # the reduction
-    agg, varsigma = paota_aggregate_stacked(
-        payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
-        axis_name=axis_name)
+    # 5+6. AirComp superposition + AWGN + normalization (eqs. 6+8, sweep 2
+    # of 2) and the zero-uploader-guarded update
+    held = carry.held
+    if not grouped:
+        # flat path: the superposition is ONE psum over the client axes
+        # (or the single-device einsum) with the noise joining once after
+        agg, varsigma = paota_aggregate_stacked(
+            payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
+            axis_name=axis_name)
+        new_global, new_prev = guarded_global_update(
+            carry.global_vec, carry.prev_global, agg, varsigma,
+            delta=rcfg.transmit_delta)
+    elif sync:
+        partial = paota_partial_stacked(payload, powers, b)
+        # held is replicated over the intra-pod shards, so scaling by
+        # 1/intra_shards makes the all-axes psum reproduce its cross-pod
+        # sum; at N=1 held == 0 and `partial + 0` is bit-exact — the sync
+        # psum IS the flat path's. This is the window's ONE cross-pod
+        # model-sized collective.
+        scale = jnp.float32(1.0 / grouping.intra_shards)
+        agg, varsigma = paota_finalize_stacked(
+            partial + held[0] * scale, payload, streams.noise_key(carry.t),
+            rcfg.sigma_n, axis_name=axis_name)
+        new_global, new_prev = guarded_global_update(
+            carry.global_vec, carry.prev_global, agg, varsigma,
+            delta=rcfg.transmit_delta)
+        held = jnp.zeros_like(held)
+    else:
+        # non-sync period: intra-pod partial only, weighted by the eq.-25
+        # staleness factor of its age at the sync slot (a static Python
+        # float — the window position is unrolled); the global holds.
+        partial = paota_partial_stacked(payload, powers, b,
+                                        axis_name=grouping.intra_axes or None)
+        age = float(rcfg.group_period - 1 - window_j)
+        held = held + jnp.float32(staleness_factor(age, rcfg.omega)) \
+            * partial[None, :]
+        varsigma = jnp.float32(0.0)
+        new_global, new_prev = carry.global_vec, carry.prev_global
 
-    # 6. zero-uploader guard: hold w_g when nothing superposed
-    new_global, new_prev = guarded_global_update(
-        carry.global_vec, carry.prev_global, agg, varsigma,
-        delta=rcfg.transmit_delta)
-
-    # 7. broadcast w^{r+1}: every uploader restarts local training. The
-    # carry's delta rows are refreshed as f32 ``trained - w_g^{r+1}``
+    # 7. broadcast w^{r+1}: every uploader restarts local training (at a
+    # grouped non-sync period the rebroadcast model is the held global).
+    # The carry's delta rows are refreshed as f32 ``trained - w_g^{r+1}``
     # BEFORE the storage cast.
     t_next = carry.t + 1
     lat = streams.latencies(t_next)
-    n_ready, n_busy, n_model = sched_broadcast(
-        ready, carry.busy_until, carry.model_round, ready, time, lat, t_next)
+    n_ready, n_lat, n_model = sched_broadcast(
+        ready, carry.busy_lat, carry.model_round, ready, lat, t_next)
     trained = streams.local_train(new_global, x, y, t_next)
     dtype = _storage_dtype(rcfg)
 
@@ -311,21 +390,40 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
 
     n_upl = ksum(b)
     denom = jnp.maximum(n_upl, 1.0)
+    if sync:
+        # a zero-uploader P2 is vacuous (every candidate t is 0 and the
+        # solver's ratio degenerates to c0/clamp ~ 1e22); report inf like
+        # the host reference's skipped-round branch does
+        p2_metric = jnp.where(n_upl > 0, p2_obj, jnp.inf)
+    else:
+        # non-sync period: the water level is per-pod, so p2_obj differs
+        # across pods (replicated intra-pod). Report the mean over pods
+        # that had uploaders — scalar psums only, never model-sized.
+        intra = grouping.intra_axes
+        pod_upl = jnp.sum(b)
+        if intra:
+            pod_upl = jax.lax.psum(pod_upl, intra)
+        pod_has = pod_upl > 0
+        obj_sum = jax.lax.psum(jnp.where(pod_has, p2_obj, 0.0),
+                               grouping.pod_axes)
+        n_active = jax.lax.psum(pod_has.astype(jnp.float32),
+                                grouping.pod_axes)
+        p2_metric = jnp.where(n_upl > 0,
+                              obj_sum / jnp.maximum(n_active, 1.0), jnp.inf)
     out = {
         "n_participants": n_upl,
         "time": time,
         "mean_staleness": ksum(stal * b) / denom,
         "beta_mean": ksum(beta * b) / denom,
+        # at a grouped non-sync period varsigma is reported 0.0 (nothing
+        # normalized this period — the window's varsigma lands at the sync)
         "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
-        # a zero-uploader P2 is vacuous (every candidate t is 0 and the
-        # solver's ratio degenerates to c0/clamp ~ 1e22); report inf like
-        # the host reference's skipped-round branch does
-        "p2_objective": jnp.where(n_upl > 0, p2_obj, jnp.inf),
+        "p2_objective": p2_metric,
     }
     carry = RoundCarry(t=t_next, time=time, ready=n_ready,
-                       busy_until=n_busy, model_round=n_model,
+                       busy_lat=n_lat, model_round=n_model,
                        global_vec=new_global, prev_global=new_prev,
-                       pending=pending, deltas=deltas)
+                       pending=pending, deltas=deltas, held=held)
     return carry, out
 
 
@@ -346,7 +444,7 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams,
         t=jnp.int32(0),
         time=jnp.float32(0.0),
         ready=jnp.zeros((k_local,), bool),
-        busy_until=streams.latencies(0),
+        busy_lat=streams.latencies(0),
         model_round=jnp.zeros((k_local,), jnp.int32),
         global_vec=vec,
         prev_global=vec,
@@ -369,3 +467,25 @@ def scan_rounds(carry: RoundCarry, x, y, n_rounds: int, *, rcfg: RoundCfg,
         return paota_round_step(c, x, y, rcfg=rcfg, streams=streams,
                                 axis_name=axis_name)
     return jax.lax.scan(step, carry, None, length=n_rounds)
+
+
+def scan_windows(carry: RoundCarry, x, y, n_windows: int, *, rcfg: RoundCfg,
+                 streams: RoundStreams, axis_name, grouping: GroupTopology):
+    """Grouped-aggregation scan: ``n_windows`` windows of
+    ``rcfg.group_period`` periods each. The window is Python-UNROLLED
+    inside the scan step (``window_j`` is static — the staleness weight and
+    the sync/non-sync collective structure are baked per position), so the
+    compiled scan body contains exactly ONE cross-pod model-sized
+    all-reduce per window — the invariant the grouped benchmark's HLO
+    check pins. Per-period metrics come back stacked (n_windows, N);
+    callers reshape to the flat (n_rounds,) timeline."""
+    def window(c, _):
+        outs = []
+        for j in range(rcfg.group_period):
+            c, out = paota_round_step(c, x, y, rcfg=rcfg, streams=streams,
+                                      axis_name=axis_name, grouping=grouping,
+                                      window_j=j)
+            outs.append(out)
+        stacked = {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+        return c, stacked
+    return jax.lax.scan(window, carry, None, length=n_windows)

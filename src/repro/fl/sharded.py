@@ -30,11 +30,24 @@ have extent 1 (the flattened-client layout of DESIGN.md §4).
 
 Phantom-client padding: a client-axis extent that does not divide K no
 longer refuses — the federation pads to the next multiple with masked
-phantom clients whose ready bits are pinned False forever (busy_until =
+phantom clients whose ready bits are pinned False forever (busy_lat =
 +inf, zero data rows, zero power). Phantoms never upload, never
 broadcast, and carry b_k = 0 through every psum and metric, so the padded
 trajectory equals the unpadded single-device one draw for draw
 (tests/test_pytree_round.py).
+
+Grouped aggregation (``group_period`` N >= 1, Air-FedGA style): the
+client axes split into POD axes and INTRA-pod axes (``pod_axes``;
+default: the first client axis indexes the pods). Every period each pod
+superposes its own clients with an intra-pod psum and accumulates the
+staleness-weighted partial into the carry's ``held`` slot; the cross-pod
+psum — the only model-sized collective that leaves a pod — fires once
+every N periods, at the window sync (``repro.fl.runtime.scan_windows``
+unrolls the window inside the scan step so the compiled scan body holds
+exactly ONE such all-reduce; benchmarks/grouped_round_bench.py counts
+them in the HLO). ``group_period=1`` makes every period a sync with a
+zero ``held``, which is op-for-op the flat program — grouped N=1 equals
+flat bit-for-bit (tests/test_grouped_round.py).
 
 Equivalence contract: every shard consumes its rows of the SAME global
 counter-RNG draws the single-device scan makes — latency and channel
@@ -64,7 +77,8 @@ from repro.core.aircomp import ChannelConfig, sample_channel_gains
 from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
                                   counter_latencies, round_tag_key)
 from repro.fl.fused import FusedPAOTA
-from repro.fl.runtime import RoundCarry, RoundStreams, scan_rounds
+from repro.fl.runtime import (GroupTopology, RoundCarry, RoundStreams,
+                              scan_rounds, scan_windows)
 from repro.fl.server import PAOTAConfig
 from repro.launch.mesh import data_axes
 from repro.sharding.rules import batch_specs, stack_client_specs
@@ -90,13 +104,20 @@ class ShardedPAOTA(FusedPAOTA):
     model_cfg, mesh, client_axes)`` (``model_cfg=None`` places leading
     client axes only — the right policy for structureless pytrees like
     the MLP).
+
+    ``group_period=N`` (N >= 1) enables grouped aggregation: the client
+    axes in ``pod_axes`` (default: the first client axis) index the pods;
+    non-sync periods psum intra-pod only and the cross-pod model-sized
+    psum fires once per N-period window. ``advance`` then moves in whole
+    windows (``n_rounds`` must be a multiple of N). N=1 is the flat
+    program bit-for-bit.
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
                  mesh=None, client_axes=None, params_mode: str = "raveled",
                  model_cfg=None, pending_dtype: str = "float32",
-                 donate: bool = True):
+                 donate: bool = True, group_period: int = 0, pod_axes=None):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -110,17 +131,46 @@ class ShardedPAOTA(FusedPAOTA):
             other = {a: mesh.shape[a] for a in mesh.axis_names
                      if a not in axes and mesh.shape[a] > 1}
             if other:
+                named = ", ".join(f"'{a}' (extent {mesh.shape[a]})"
+                                  for a in sorted(other))
                 raise NotImplementedError(
-                    f"params_mode='pytree' shards clients only; non-client "
-                    f"mesh axes {other} would split the leaves' model dims, "
-                    f"and the round's tree reductions do not yet psum over "
-                    f"them (intra-client TP is the multi-pod follow-on — "
-                    f"see ROADMAP)")
+                    f"params_mode='pytree' shards the client axes only, but "
+                    f"non-client mesh axis {named} has extent > 1: it would "
+                    f"split the stacked leaves' model dims, which the "
+                    f"round's tree reductions do not yet psum over "
+                    f"(intra-client TP is the ROADMAP follow-on). Either "
+                    f"use params_mode='raveled' (the flat (K, d) federation "
+                    f"over the client axes), rebuild the mesh with extent 1 "
+                    f"on {sorted(other)}, or include the axis in "
+                    f"client_axes.")
+        # grouped-aggregation topology: pod axes index the groups, the
+        # remaining client axes are intra-pod
+        if group_period < 0:
+            raise ValueError(f"group_period={group_period} (expected >= 0)")
+        if pod_axes is not None and not group_period:
+            raise ValueError("pod_axes without group_period: pass "
+                             "group_period=N >= 1 to enable grouped "
+                             "aggregation")
+        self._grouping = None
+        self.n_pod_groups = 1
+        if group_period:
+            pods = tuple(pod_axes) if pod_axes else (axes[0],)
+            bad = [a for a in pods if a not in axes]
+            if bad or len(set(pods)) != len(pods):
+                raise ValueError(f"pod_axes={pods} must be distinct client "
+                                 f"axes (client_axes={axes})")
+            intra = tuple(a for a in axes if a not in pods)
+            self._grouping = GroupTopology(
+                pod_axes=pods, intra_axes=intra,
+                intra_shards=int(math.prod(mesh.shape[a] for a in intra)))
+            self.n_pod_groups = int(math.prod(mesh.shape[a] for a in pods))
         # super() builds the engine, RoundCfg, keys, and jits _run_scan —
         # which the overrides below turn into the shard_map program
         super().__init__(init_params, clients, chan, sched_cfg, cfg,
                          params_mode=params_mode, pending_dtype=pending_dtype,
                          donate=donate)
+        if group_period:
+            self._rcfg = self._rcfg._replace(group_period=group_period)
         # phantom-client padding: pad K to the next multiple of the
         # client-axis extent with masked never-ready clients
         self.k_pad = -(-self.k // self.n_shards) * self.n_shards
@@ -156,12 +206,19 @@ class ShardedPAOTA(FusedPAOTA):
                                                self._init_global)
         else:
             pend_spec, glob_spec = P(ax, None), P()
+        if self._grouping is not None:
+            pods = self._grouping.pod_axes
+            # held rows shard over the pod axes and replicate intra-pod
+            # (the intra-pod psum that builds them replicates them there)
+            held_spec = P(pods[0] if len(pods) == 1 else pods, None)
+        else:
+            held_spec = None
         self._carry_specs = RoundCarry(
-            t=P(), time=P(), ready=P(ax), busy_until=P(ax),
+            t=P(), time=P(), ready=P(ax), busy_lat=P(ax),
             model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
             # transmit='delta' carries no pending plane (None subtree)
             pending=None if self._rcfg.transmit_delta else pend_spec,
-            deltas=pend_spec)
+            deltas=pend_spec, held=held_spec)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
@@ -189,7 +246,7 @@ class ShardedPAOTA(FusedPAOTA):
     # ------------------------------------------------------------------
     # phantom-aware full-federation streams (round-0 init runs these on
     # the placed data before the scan takes over): real clients see the
-    # exact unpadded draws, phantoms get busy_until = +inf so sched_advance
+    # exact unpadded draws, phantoms get busy_lat = +inf so sched_advance
     # can never flip their ready bit
     # ------------------------------------------------------------------
     def _streams(self) -> RoundStreams:
@@ -257,20 +314,53 @@ class ShardedPAOTA(FusedPAOTA):
 
     # ------------------------------------------------------------------
     # the sharded scan (replaces FusedPAOTA's single-device _run_scan;
-    # _init_carry is inherited — per-client init math has no cross-client
-    # reduction, so GSPMD runs it row-parallel over the same placed data)
+    # per-client init math has no cross-client reduction, so GSPMD runs
+    # _init_carry row-parallel over the same placed data — the grouped
+    # override below only adds the zeroed held slot)
     # ------------------------------------------------------------------
+    def _init_carry(self, vec, x, y) -> RoundCarry:
+        carry = super()._init_carry(vec, x, y)
+        if self._grouping is not None:
+            carry = carry._replace(held=jnp.zeros(
+                (self.n_pod_groups, self.d + 1), jnp.float32))
+        return carry
+
     def _run_scan(self, carry: RoundCarry, x, y, n_rounds: int):
         axes = self.client_axes
+        grouping, n = self._grouping, self._rcfg.group_period
 
         def body(c, xs, ys):
             streams = self._shard_streams(self._shard_offset())
-            return scan_rounds(c, xs, ys, n_rounds, rcfg=self._rcfg,
-                               streams=streams, axis_name=axes)
+            if grouping is None:
+                return scan_rounds(c, xs, ys, n_rounds, rcfg=self._rcfg,
+                                   streams=streams, axis_name=axes)
+            return scan_windows(c, xs, ys, n_rounds // n, rcfg=self._rcfg,
+                                streams=streams, axis_name=axes,
+                                grouping=grouping)
 
+        if grouping is not None and n_rounds % n:
+            raise ValueError(
+                f"grouped aggregation advances whole windows: n_rounds="
+                f"{n_rounds} is not a multiple of group_period={n}")
         smap = shard_map(body, self.mesh,
                          in_specs=(self._carry_specs, self._x_spec,
                                    self._y_spec),
                          out_specs=(self._carry_specs, self._out_specs),
                          check_rep=True)
-        return smap(carry, x, y)
+        carry, outs = smap(carry, x, y)
+        if grouping is not None:
+            # window-stacked (n_windows, N) metrics back to the flat
+            # (n_rounds,) timeline the driver's history expects
+            outs = {k: v.reshape((n_rounds,)) for k, v in outs.items()}
+        return carry, outs
+
+    def compiled_scan_hlo(self, n_rounds: int) -> str:
+        """Compiled HLO of the n-round advance (builds the round-0 carry
+        if needed, does NOT run the scan) — what the grouped benchmark's
+        cross-pod collective count inspects."""
+        if self._carry is None:
+            self._carry = self._jit_init(self._init_global, self.engine._x,
+                                         self.engine._y)
+        return self._jit_scan.lower(self._carry, self.engine._x,
+                                    self.engine._y,
+                                    n_rounds=n_rounds).compile().as_text()

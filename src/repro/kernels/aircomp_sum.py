@@ -51,14 +51,20 @@ def _kernel(bp_ref, x_ref, noise_ref, out_ref):
 def aircomp_sum_pallas(stacked: jnp.ndarray, bp: jnp.ndarray,
                        noise: jnp.ndarray, *, block_d: int = DEFAULT_BLOCK_D,
                        interpret: bool | None = None) -> jnp.ndarray:
-    """stacked: (K, D); bp: (K,); noise: (D,) -> (D,) aggregate.
+    """stacked: (K, D); bp: (K,); noise: (D,) -> (D,) f32 aggregate.
+
+    The payload may be bf16; the contraction accumulates in f32, the AWGN
+    joins that f32 accumulator un-rounded, and the aggregate comes back
+    f32 — the same "f32 accumulation, f32 aggregate" contract as
+    ``superpose_normalize_pallas`` / ``aircomp_sum_tree_psum`` (a bf16
+    carry stores its planes rounded, but the received y must not be).
 
     ``interpret=None`` resolves from the active backend (compiled on TPU,
     interpret elsewhere)."""
     if interpret is None:
         interpret = backend_interpret_default()
     k, d = stacked.shape
-    noise = noise.astype(stacked.dtype)
+    noise = noise.astype(jnp.float32)
     pad = (-d) % block_d
     if pad:
         stacked = jnp.pad(stacked, ((0, 0), (0, pad)))
@@ -74,7 +80,7 @@ def aircomp_sum_pallas(stacked: jnp.ndarray, bp: jnp.ndarray,
             pl.BlockSpec((1, block_d), lambda i: (0, i)),     # noise stripe
         ],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, dp), stacked.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
         interpret=interpret,
     )(bp[None, :].astype(jnp.float32), stacked, noise[None, :])
     return out[0, :d]
@@ -218,16 +224,51 @@ def aircomp_sum_tree_psum(stacked_leaves, bp: jnp.ndarray, noise_leaves,
     dtype: a bf16 carry stores its planes rounded, but the global update
     must stay full precision (same contract as ``superpose_normalize``).
     """
-    if varsigma_min is None:
-        from repro.core.aircomp import VARSIGMA_MIN
-        varsigma_min = VARSIGMA_MIN
+    flat = aircomp_partial_tree(stacked_leaves, bp, axis_name=axis_name)
+    return aircomp_finalize_tree(flat, stacked_leaves, noise_leaves,
+                                 varsigma_min=varsigma_min)
+
+
+def aircomp_partial_tree(stacked_leaves, bp: jnp.ndarray, axis_name=None):
+    """The local half of ``aircomp_sum_tree_psum``: this shard's flattened
+    eq.-6 superposition partial — per-leaf (1, K)x(K, D) f32 contractions
+    concatenated with the local varsigma partial (sum of bp) appended,
+    one flat (d_total + 1,) f32 vector.
+
+    ``axis_name=None`` returns the purely local partial; a mesh axis
+    name/tuple reduces it over that SUBSET of the client axes (e.g. the
+    intra-pod axes of grouped aggregation — a per-pod partial that stays
+    resident across periods until the cross-pod sync). bp = 0 rows (masked
+    or phantom clients) contribute exact zeros, so an all-masked shard's
+    partial is bit-exactly zero."""
     bp32 = bp[None, :].astype(jnp.float32)
     parts = [jax.lax.dot_general(
         bp32, leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32),
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)[0]
         for leaf in stacked_leaves]
     parts.append(jnp.sum(bp).astype(jnp.float32)[None])
-    flat = jax.lax.psum(jnp.concatenate(parts), axis_name)   # the ONE psum
+    flat = jnp.concatenate(parts)
+    if axis_name:
+        flat = jax.lax.psum(flat, axis_name)
+    return flat
+
+
+def aircomp_finalize_tree(flat: jnp.ndarray, stacked_leaves, noise_leaves,
+                          axis_name=None, varsigma_min: float | None = None):
+    """The finishing half of ``aircomp_sum_tree_psum``: from the flat
+    (d_total + 1,) superposition partial, optionally run the final psum
+    over the remaining client axes (the ONE cross-shard — or cross-pod —
+    collective), then clamp varsigma, split per leaf, and add the shared
+    AWGN once in f32 before normalizing. ``stacked_leaves`` only supplies
+    the leaf shapes for the split.
+
+    Returns (list of f32 aggregate leaves, varsigma) — replicated over
+    every axis the partial was reduced over."""
+    if varsigma_min is None:
+        from repro.core.aircomp import VARSIGMA_MIN
+        varsigma_min = VARSIGMA_MIN
+    if axis_name:
+        flat = jax.lax.psum(flat, axis_name)
     varsigma = jnp.maximum(flat[-1], varsigma_min)
     out, off = [], 0
     for leaf, noise in zip(stacked_leaves, noise_leaves):

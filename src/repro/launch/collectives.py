@@ -1,0 +1,95 @@
+"""Compiled-HLO collective auditing for the grouped aggregation plane.
+
+The grouped round's contract is STRUCTURAL, not just numerical: a
+``group_period=N`` window must compile to exactly ONE cross-pod
+model-sized all-reduce (the window sync), with every other collective
+either intra-pod (the per-period partial superpositions) or small
+(water-filling grid psums, scalar metrics). Numerics cannot see the
+difference — a flat psum every period produces the same N=1 trajectory —
+so the benchmark and the grouped test suite pin the invariant by parsing
+the compiled HLO (``ShardedPAOTA.compiled_scan_hlo``) and counting
+all-reduces by replica-group span and payload size.
+
+Replica groups come in both HLO spellings: the explicit nested-brace list
+``replica_groups={{0,1},{2,3}}`` and the iota form
+``replica_groups=[2,4]<=[8]`` (optionally with a transpose,
+``[4,2]<=[2,4]T(1,0)``). Partition indices are row-major over the mesh
+shape in axis-name order (``mesh.devices`` layout), so a partition's pod
+coordinate is its unravelled index at the pod dims.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterator, List, Tuple
+
+import numpy as np
+
+# an op result type, e.g. f32[13219]{0} or pred[] — dims may be empty
+_TYPE_RE = re.compile(r"\b[a-z0-9]+\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{.*?\}\}|"
+    r"\[[0-9,]+\]<=\[[0-9,]+\](?:T\([0-9,]+\))?)")
+
+
+def _parse_groups(attr: str) -> List[List[int]]:
+    """Materialize a replica_groups attribute into explicit index lists."""
+    if attr.startswith("{"):
+        return [[int(t) for t in m.group(1).replace(" ", "").split(",") if t]
+                for m in re.finditer(r"\{([0-9, ]+)\}", attr)]
+    m = re.match(r"\[([0-9,]+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?", attr)
+    if m is None:
+        raise ValueError(f"unrecognized replica_groups attribute: {attr!r}")
+    out_shape = [int(t) for t in m.group(1).split(",")]
+    src_shape = [int(t) for t in m.group(2).split(",")]
+    arr = np.arange(int(np.prod(src_shape))).reshape(src_shape)
+    if m.group(3):
+        arr = arr.transpose([int(t) for t in m.group(3).split(",")])
+    return [list(map(int, row)) for row in arr.reshape(out_shape)]
+
+
+def iter_allreduces(hlo_text: str) -> Iterator[Tuple[int, List[List[int]]]]:
+    """Yield (max element count, replica groups) for every all-reduce /
+    all-reduce-start op in the HLO text. Tuple-shaped results (the
+    all-reduce combiner merges independent psums into one op) report the
+    LARGEST member — the op moves its biggest payload across the groups."""
+    for line in hlo_text.splitlines():
+        head, sep, _ = line.partition(" all-reduce(")
+        if not sep:
+            head, sep, _ = line.partition(" all-reduce-start(")
+            if not sep:
+                continue
+        _, _, types = head.rpartition(" = ")
+        nelems = max((int(np.prod([int(d) for d in m.group(1).split(",")]))
+                      if m.group(1) else 1
+                      for m in _TYPE_RE.finditer(types)), default=1)
+        gm = _GROUPS_RE.search(line)
+        groups = _parse_groups(gm.group(1)) if gm else []
+        yield nelems, groups
+
+
+def cross_pod_allreduce_count(hlo_text: str, mesh_shape: Tuple[int, ...],
+                              pod_dims: Tuple[int, ...],
+                              min_elements: int = 8192) -> int:
+    """Count all-reduces whose replica groups SPAN pods and whose payload
+    is at least ``min_elements`` elements (model-sized; the default sits
+    above the water-filling grid of 4096 and the scalar metrics, below
+    any federated model). ``mesh_shape`` is the mesh's extent tuple in
+    axis-name order, ``pod_dims`` the positions of the pod axes in it.
+    Empty replica groups mean ALL devices in one group — cross-pod
+    whenever any pod dim has extent > 1."""
+    def pod_of(p: int) -> Tuple[int, ...]:
+        coords = np.unravel_index(p, mesh_shape)
+        return tuple(int(coords[d]) for d in pod_dims)
+
+    n_pods = int(np.prod([mesh_shape[d] for d in pod_dims]))
+    count = 0
+    for nelems, groups in iter_allreduces(hlo_text):
+        if nelems < min_elements:
+            continue
+        if not groups:
+            crosses = n_pods > 1
+        else:
+            crosses = any(len({pod_of(p) for p in g}) > 1 for g in groups)
+        if crosses:
+            count += 1
+    return count

@@ -28,6 +28,12 @@ via ``repro.sharding.rules.stack_client_specs``.
 pending/delta planes in bf16 — half the K x d working set for giant-model
 clients; every reduction accumulates f32 and the globals stay f32
 (EXPERIMENTS.md §Round perf).
+
+``--group-period N`` (sharded, on a ("pod", "data") mesh from
+``repro.launch.mesh.make_pod_mesh``) turns on multi-pod grouped
+aggregation: intra-pod partial superpositions every period, ONE cross-pod
+model-sized psum per N-period window, held partials staleness-weighted
+per eq. 25 (EXPERIMENTS.md §Multi-pod grouped aggregation).
 """
 from examples.fl_noniid_mnist import main
 

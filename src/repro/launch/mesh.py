@@ -45,6 +45,22 @@ def make_cpu_mesh(*, data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_pod_mesh(*, pods: int = 2, data: int = 256):
+    """("pod", "data") client mesh for grouped aggregation: ``pods``
+    semi-async aggregation groups of ``data`` single-chip client shards
+    each (the 2x256 = 512-chip multi-pod topology with the model axis
+    flattened into clients). Same forced-host-device contract as
+    ``make_cpu_mesh``: on CPU set XLA_FLAGS before jax initializes."""
+    n = pods * data
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())}; on CPU force "
+            f"virtual devices with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            f"initializes (set it in the environment, not after import)")
+    return jax.make_mesh((pods, data), ("pod", "data"))
+
+
 def make_client_mesh(shards: int | None = None):
     """All-devices 1-model-axis mesh (("data", "model") = (n, 1)) for the
     mesh-sharded PAOTA round: the whole device pool becomes the client

@@ -45,3 +45,12 @@ def client_mesh_8():
     require_host_devices(8)
     from repro.launch.mesh import make_client_mesh
     return make_client_mesh(8)
+
+
+@pytest.fixture
+def pod_mesh_2x4():
+    """(2, 4) ("pod", "data") mesh — the grouped-aggregation topology's
+    test-sized twin (2 pods of 4 client shards)."""
+    require_host_devices(8)
+    from repro.launch.mesh import make_pod_mesh
+    return make_pod_mesh(pods=2, data=4)

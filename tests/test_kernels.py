@@ -29,6 +29,26 @@ def test_aircomp_sum_sweep(k, d, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+def test_aircomp_sum_bf16_payload_f32_aggregate():
+    """Regression: a bf16 payload must come back as an f32 aggregate with
+    the AWGN joining the f32 accumulator UN-rounded. The kernel wrapper
+    used to cast the noise to the payload dtype and emit the aggregate in
+    it, so a bf16 carry re-rounded the received y (the global update plane)
+    to 8 mantissa bits every round."""
+    k, d = 24, 1111
+    x32 = jnp.asarray(RNG.normal(size=(k, d)), jnp.float32)
+    x = x32.astype(jnp.bfloat16)
+    bp = jnp.asarray(RNG.random(k), jnp.float32)
+    n = jnp.asarray(RNG.normal(size=d), jnp.float32)
+    got = aircomp_sum_pallas(x, bp, n, interpret=True)
+    assert got.dtype == jnp.float32
+    # oracle on the SAME rounded payload but full-precision noise path: the
+    # only error left is the bf16 storage rounding of x, not of the output
+    want = ref.aircomp_sum_ref(x.astype(jnp.float32), bp, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_aircomp_sum_masked_clients_ignored():
     x = jnp.asarray(RNG.normal(size=(8, 256)), jnp.float32)
     bp = jnp.asarray([1.0, 0, 2.0, 0, 0, 0.5, 0, 0], jnp.float32)
