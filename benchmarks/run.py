@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   grouped_round — multi-pod grouped aggregation: K=10000 on the forced
              512-device (2, 256) pod mesh, dryrun lower+compile + the
              one-cross-pod-psum-per-window compiled-HLO collective check
+  cohort_round — active-cohort (m, d) payload plane vs dense carry:
+             driver + synthetic-stream rounds/sec and carry bytes at
+             K in {1e3, 1e5, 1e6} (1e6 = state-plane-only acceptance run)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
@@ -33,7 +36,8 @@ import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
            "fused_round_bench", "round_perf_bench", "sharded_round_bench",
-           "grouped_round_bench", "fig3", "fig4", "table1", "ablation"]
+           "grouped_round_bench", "cohort_round_bench", "fig3", "fig4",
+           "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
            "fused_round": "fused_round_bench", "fused": "fused_round_bench",
@@ -41,7 +45,9 @@ ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "sharded_round": "sharded_round_bench",
            "sharded": "sharded_round_bench",
            "grouped_round": "grouped_round_bench",
-           "grouped": "grouped_round_bench"}
+           "grouped": "grouped_round_bench",
+           "cohort_round": "cohort_round_bench",
+           "cohort": "cohort_round_bench"}
 
 
 def main() -> None:

@@ -6,6 +6,8 @@
 #                          + fused-round smoke with artifact check
 #                          + round-perf smoke (tracked delta-plane series,
 #                            K=16; >2x wall-clock regressions fail)
+#                          + cohort-round smoke (dense vs active-cohort
+#                            synthetic pair at K=1e3, carry-bytes tracked)
 #   CI_FULL=1 scripts/ci.sh   full suite (nightly-style) + sharded
 #                          benchmark smoke (8 forced devices, K=16)
 #   CI_BENCH=1 scripts/ci.sh  also run the engine benchmark after tests
@@ -59,6 +61,21 @@ art = json.load(open(f"{sys.argv[1]}/BENCH_round_perf_smoke.json"))
 names = [r["name"] for r in art["rows"]]
 assert any("fused_raveled_k16" in n for n in names), names
 assert any("sharded_raveled_k16" in n for n in names), names
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
+EOF
+
+# cohort-round smoke: synthetic-stream dense vs active-cohort pair at
+# K=1e3 (benchmarks/cohort_round_bench; the carry-bytes shrink and the
+# rounds/sec win are the tracked series). Gated by the >2x diff below.
+rm -f "$BENCH_OUT/BENCH_cohort_round_smoke.json"
+python -m benchmarks.cohort_round_bench smoke
+python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_cohort_round_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("synth_dense_k1000" in n for n in names), names
+assert any("synth_cohort_" in n for n in names), names
+assert all("carry_bytes=" in r["derived"] for r in art["rows"]), art["rows"]
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
 

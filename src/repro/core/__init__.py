@@ -15,6 +15,9 @@ from repro.core.dinkelbach import solve_p2  # noqa: F401
 from repro.core.power_control import (P2Problem, build_p2, cosine_similarity,  # noqa: F401
                                       p2_constants, power_from_beta,
                                       similarity_factor, staleness_factor)
-from repro.core.scheduler import (SchedulerConfig, SemiAsyncScheduler,  # noqa: F401
-                                  counter_latencies, round_tag_key,
-                                  sched_advance, sched_broadcast, slot_ready)
+from repro.core.scheduler import (ScenarioConfig, SchedulerConfig,  # noqa: F401
+                                  SemiAsyncScheduler, counter_latencies,
+                                  round_tag_key, sched_advance,
+                                  sched_broadcast, scenario_hyperparams,
+                                  scenario_latencies, scenario_masks,
+                                  scenario_traits, slot_ready)

@@ -48,6 +48,12 @@ import numpy as np
 # one tag per independent per-round RNG consumer (counter-based streams):
 # key_{r,tag} = fold_in(fold_in(base_key, r), tag)
 TAG_LATENCY, TAG_CHANNEL, TAG_NOISE, TAG_BATCH = 0, 1, 2, 3
+# scenario-simulator consumers (same fold-in family, so host and fused
+# simulators are draw-identical): per-round availability / dropout masks,
+# the cohort scheduler's priority scores, and the STATIC per-client traits
+# (cycle phases, responsiveness offsets, heterogeneous hyperparameters —
+# always drawn at round 0)
+TAG_AVAIL, TAG_DROPOUT, TAG_SCHED, TAG_TRAIT = 4, 5, 6, 7
 
 
 def round_tag_key(base_key, round_idx, tag: int):
@@ -63,6 +69,158 @@ def counter_latencies(base_key, round_idx, k: int, lo: float, hi: float):
     reference and the fused path consume identical values per client."""
     key = round_tag_key(base_key, round_idx, TAG_LATENCY)
     return jax.random.uniform(key, (k,), minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# client-state scenario simulator (FLGo-style, vectorized)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioConfig:
+    """Composable client-state scenario: availability cycles, connectivity
+    dropouts, responsiveness distributions, and per-client hyperparameter
+    heterogeneity — the FLGo system-simulator dimensions (availability /
+    connectivity / responsiveness / completeness), but VECTORIZED: every
+    draw is a (K,) counter-RNG array keyed by ``round_tag_key`` (never a
+    Python priority queue), so the masks advance inside ``lax.scan`` and
+    the host scheduler reproduces them draw for draw
+    (tests/test_scenario_sim.py).
+
+    The default config is the identity scenario: always available, no
+    dropouts, uniform responsiveness, homogeneous hyperparameters —
+    bit-identical to running with no scenario at all.
+    """
+    availability: str = "always"   # "always" | "cycle" (staggered duty
+                                   # cycle: client k is available for
+                                   # duty*period rounds out of every
+                                   # `period`, phase drawn per client) |
+                                   # "bernoulli" (i.i.d. per round)
+    avail_period: int = 10         # cycle length in rounds ("cycle")
+    avail_duty: float = 0.5        # available fraction of the cycle
+    avail_prob: float = 0.9        # P(available) ("bernoulli")
+    dropout_prob: float = 0.0      # P(a ready upload is lost in transit);
+                                   # the client restarts from the fresh
+                                   # broadcast — its update never superposes
+    responsiveness: str = "uniform"  # "uniform": U(lat_lo, lat_hi) —
+                                   # delegates to counter_latencies verbatim
+                                   # (bit-identical draws); "lognormal":
+                                   # shift + exp(mu_k + sigma * z), the
+                                   # FLGo long-tail latency model, warped
+                                   # from the SAME per-round uniform draw
+    lat_shift: float = 0.0         # lognormal location shift (seconds)
+    lat_sigma: float = 0.25        # lognormal per-draw sigma
+    lat_mu_spread: float = 0.5     # stddev of the static per-client mu_k
+                                   # trait (device-class speed diversity)
+    het_steps: tuple = ()          # per-client local-step choices, e.g.
+                                   # (1, 3, 5): each client draws one
+                                   # (static trait; () = homogeneous M)
+    het_batch: tuple = ()          # per-client batch-size choices; exact
+                                   # small-batch gradients when each choice
+                                   # divides the engine batch_size (the
+                                   # plan repeats the first b_k draws
+                                   # cyclically), () = homogeneous B
+
+    def __post_init__(self):
+        if self.availability not in ("always", "cycle", "bernoulli"):
+            raise ValueError(f"availability={self.availability!r} (expected "
+                             "'always', 'cycle' or 'bernoulli')")
+        if self.responsiveness not in ("uniform", "lognormal"):
+            raise ValueError(f"responsiveness={self.responsiveness!r} "
+                             "(expected 'uniform' or 'lognormal')")
+        if self.availability == "cycle" and self.avail_period < 1:
+            raise ValueError(f"avail_period={self.avail_period} (expected "
+                             ">= 1)")
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(f"dropout_prob={self.dropout_prob} (expected "
+                             "[0, 1))")
+
+    @property
+    def has_masks(self) -> bool:
+        """True when the scenario can mask uploads at all — the dense round
+        core skips the mask stage entirely otherwise (trace-time Python
+        branch), keeping the no-scenario program bit-identical."""
+        return self.availability != "always" or self.dropout_prob > 0.0
+
+
+def scenario_traits(base_key, k: int, sc: ScenarioConfig):
+    """STATIC per-client traits (drawn once, at the round-0 tag, and
+    recomputed identically wherever needed — they are (K,)-sized, so
+    recomputation beats carrying them): cycle phases and responsiveness
+    offsets mu_k. Returns (phase (K,) i32, mu (K,) f32)."""
+    tk = round_tag_key(base_key, 0, TAG_TRAIT)
+    phase = jax.random.randint(jax.random.fold_in(tk, 0), (k,), 0,
+                               max(sc.avail_period, 1), dtype=jnp.int32)
+    mu = sc.lat_mu_spread * jax.random.normal(jax.random.fold_in(tk, 1),
+                                              (k,), jnp.float32)
+    return phase, mu
+
+
+def scenario_masks(base_key, round_idx, k: int, sc: ScenarioConfig):
+    """(available, dropped) bool (K,) masks at the aggregation slot of
+    ``round_idx`` — pure counter-RNG draws (``round_idx`` may be traced).
+    An unavailable-but-ready client HOLDS its finished update and retries
+    at a later slot (staleness keeps growing); a dropped upload is lost
+    and the client restarts from the fresh broadcast."""
+    if sc.availability == "always":
+        avail = jnp.ones((k,), bool)
+    elif sc.availability == "cycle":
+        phase, _ = scenario_traits(base_key, k, sc)
+        on_rounds = int(round(sc.avail_duty * sc.avail_period))
+        pos = jnp.mod(jnp.asarray(round_idx, jnp.int32) + phase,
+                      sc.avail_period)
+        avail = pos < jnp.int32(on_rounds)
+    else:  # bernoulli
+        key = round_tag_key(base_key, round_idx, TAG_AVAIL)
+        avail = jax.random.uniform(key, (k,)) < jnp.float32(sc.avail_prob)
+    if sc.dropout_prob > 0.0:
+        key = round_tag_key(base_key, round_idx, TAG_DROPOUT)
+        drop = jax.random.uniform(key, (k,)) < jnp.float32(sc.dropout_prob)
+    else:
+        drop = jnp.zeros((k,), bool)
+    return avail, drop
+
+
+def scenario_latencies(base_key, round_idx, k: int, lo: float, hi: float,
+                       sc: ScenarioConfig):
+    """Per-session latency draws under the scenario's responsiveness model.
+
+    "uniform" delegates to ``counter_latencies`` verbatim — bit-identical
+    to the no-scenario stream. "lognormal" warps the SAME one-uniform-per-
+    client-per-round draw through the inverse normal CDF:
+
+        lat_k = shift + exp(mu_k + sigma * ndtri(u_k)) ,
+
+    with the static mu_k trait centered so the median session sits at the
+    midpoint of (lo, hi) — heterogeneous device classes with a long tail,
+    same RNG budget and keying as the uniform stream."""
+    if sc.responsiveness == "uniform":
+        return counter_latencies(base_key, round_idx, k, lo, hi)
+    key = round_tag_key(base_key, round_idx, TAG_LATENCY)
+    u = jax.random.uniform(key, (k,))
+    _, mu = scenario_traits(base_key, k, sc)
+    med = max(0.5 * (lo + hi) - sc.lat_shift, 1e-3)
+    z = jax.scipy.special.ndtri(jnp.clip(u, 1e-7, 1.0 - 1e-7))
+    lat = sc.lat_shift + jnp.exp(mu + jnp.float32(np.log(med))
+                                 + jnp.float32(sc.lat_sigma) * z)
+    return lat.astype(jnp.float32)
+
+
+def scenario_hyperparams(base_key, k: int, sc: ScenarioConfig):
+    """Static per-client hyperparameter heterogeneity: (steps_k, batch_k)
+    (K,) i32 arrays drawn from the scenario's choice tuples (None for a
+    dimension left homogeneous). Consumed by ``BatchedEngine
+    .set_heterogeneity``."""
+    tk = round_tag_key(base_key, 0, TAG_TRAIT)
+    steps_k = batch_k = None
+    if sc.het_steps:
+        c = jnp.asarray(sc.het_steps, jnp.int32)
+        steps_k = c[jax.random.randint(jax.random.fold_in(tk, 2), (k,), 0,
+                                       len(sc.het_steps))]
+    if sc.het_batch:
+        c = jnp.asarray(sc.het_batch, jnp.int32)
+        batch_k = c[jax.random.randint(jax.random.fold_in(tk, 3), (k,), 0,
+                                       len(sc.het_batch))]
+    return steps_k, batch_k
 
 
 # ---------------------------------------------------------------------------
@@ -138,10 +296,26 @@ class SchedulerConfig:
 
 
 class SemiAsyncScheduler:
-    """Vectorized simulation of PAOTA's periodic aggregation (array state)."""
+    """Vectorized simulation of PAOTA's periodic aggregation (array state).
 
-    def __init__(self, cfg: SchedulerConfig):
+    ``scenario`` (a ``ScenarioConfig``, counter RNG only) runs the same
+    vectorized client-state simulator the fused scan advances:
+    availability/dropout masks gate which ready clients upload, and the
+    responsiveness model shapes the latency draws. ``restart_ids`` after
+    ``advance_to_aggregation`` are the clients that should receive the new
+    broadcast (ready AND available — a dropped uploader restarts too, its
+    update was lost in transit); without a scenario they equal the
+    uploaders, preserving the historical contract."""
+
+    def __init__(self, cfg: SchedulerConfig, scenario=None):
         self.cfg = cfg
+        if scenario is not None and cfg.rng != "counter":
+            raise ValueError("scenario simulation needs counter RNG "
+                             "(SchedulerConfig(rng='counter')): the per-round "
+                             "masks are keyed draws shared with the fused "
+                             "scan, which a sequential PCG64 stream cannot "
+                             "reproduce")
+        self.scenario = scenario
         self.rng = np.random.default_rng(cfg.seed)
         self.time = 0.0
         self.round = 0
@@ -156,6 +330,7 @@ class SemiAsyncScheduler:
         self.model_round = np.zeros(cfg.n_clients, dtype=np.int64)
         self._jkey = (jax.random.PRNGKey(cfg.seed)
                       if cfg.rng == "counter" else None)
+        self.restart_ids = np.arange(cfg.n_clients, dtype=np.int64)
 
     def _draw_latency(self, size=None):
         return self.rng.uniform(self.cfg.lat_lo, self.cfg.lat_hi, size)
@@ -165,14 +340,21 @@ class SemiAsyncScheduler:
         local training; each gets a fresh latency draw (one per client, in
         id order — the same stream consumption as the scalar reference).
         Counter mode draws all K latencies keyed on the broadcast round and
-        indexes the participants, matching the fused path draw-for-draw."""
+        indexes the participants, matching the fused path draw-for-draw
+        (under a scenario, through its responsiveness model)."""
         ids = np.asarray(participant_ids, dtype=np.int64)
         if ids.size == 0:
             return
         if self.cfg.rng == "counter":
-            lat = np.asarray(counter_latencies(
-                self._jkey, self.round, self.cfg.n_clients,
-                self.cfg.lat_lo, self.cfg.lat_hi))[ids]
+            if self.scenario is None:
+                full = counter_latencies(
+                    self._jkey, self.round, self.cfg.n_clients,
+                    self.cfg.lat_lo, self.cfg.lat_hi)
+            else:
+                full = scenario_latencies(
+                    self._jkey, self.round, self.cfg.n_clients,
+                    self.cfg.lat_lo, self.cfg.lat_hi, self.scenario)
+            lat = np.asarray(full)[ids]
         else:
             lat = self._draw_latency(ids.size)
         self.ready[ids] = False
@@ -183,12 +365,25 @@ class SemiAsyncScheduler:
         """Advance sim clock by delta_t; returns (uploaders, staleness array).
 
         uploaders: indices with b_k = 1 at the aggregation slot (finished
-        local training during this period). staleness[k] = s_k^r.
+        local training during this period) — under a scenario, additionally
+        available and not dropped. staleness[k] = s_k^r. ``restart_ids`` is
+        refreshed with the clients the caller should re-broadcast to.
         """
         self.ready |= np.asarray(slot_ready(self.busy_lat, self.model_round,
                                             self.round, self.cfg.delta_t))
-        stal = np.where(self.ready, self.round - self.model_round, 0)
-        uploaders = np.flatnonzero(self.ready).astype(np.int64)
+        if self.scenario is None or not self.scenario.has_masks:
+            upl_mask = restart_mask = self.ready
+        else:
+            avail, drop = (np.asarray(m) for m in scenario_masks(
+                self._jkey, self.round, self.cfg.n_clients, self.scenario))
+            # unavailable-but-ready clients HOLD their update (ready stays
+            # set; staleness keeps growing); dropped uploads are lost but
+            # the client still restarts from the fresh broadcast
+            upl_mask = self.ready & avail & ~drop
+            restart_mask = self.ready & avail
+        stal = np.where(upl_mask, self.round - self.model_round, 0)
+        uploaders = np.flatnonzero(upl_mask).astype(np.int64)
+        self.restart_ids = np.flatnonzero(restart_mask).astype(np.int64)
         self.round += 1
         # drift-free clock (report-only): recomputed, never accumulated
         self.time = self.round * self.cfg.delta_t

@@ -80,7 +80,7 @@ def build_federation(x, y, parts, seed: int = 0):
 
 
 def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int,
-                       client_ids=None):
+                       client_ids=None, batch_sizes=None):
     """Stateless minibatch plan for a whole federation: (K, M, B) int32
     indices, client k drawing i.i.d. uniform from range(n_samples[k]).
 
@@ -94,7 +94,16 @@ def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int,
     (default ``arange(K)``). A mesh shard holding clients [off, off+k_loc)
     passes its id slice and gets bit-identical rows to the full-federation
     plan — each client's draw depends only on (key, its id, its size), so
-    plans shard over the client axis with no cross-device draws."""
+    plans shard over the client axis with no cross-device draws.
+
+    ``batch_sizes``: optional (K,) per-client effective batch sizes
+    b_k <= batch_size (heterogeneous-client federations). The plan keeps
+    its fixed (K, M, B) shape — column j of client k's rows repeats draw
+    j mod b_k — so a mean-reduced gradient over the row weights each of
+    the b_k distinct samples by ceil/floor(B / b_k) / B: EXACTLY the
+    b_k-minibatch gradient when b_k divides B, a near-uniform weighting
+    otherwise. b_k = B reproduces the homogeneous plan bit for bit (the
+    underlying draws are shared)."""
     n_samples = jnp.asarray(n_samples, jnp.int32)
     if client_ids is None:
         client_ids = jnp.arange(n_samples.shape[0], dtype=jnp.uint32)
@@ -106,7 +115,13 @@ def counter_batch_plan(key, n_samples, n_batches: int, batch_size: int,
         return jax.random.randint(ck, (n_batches, batch_size), 0, nk,
                                   dtype=jnp.int32)
 
-    return jax.vmap(one)(client_ids, n_samples)
+    plans = jax.vmap(one)(client_ids, n_samples)
+    if batch_sizes is None:
+        return plans
+    batch_sizes = jnp.asarray(batch_sizes, jnp.int32)
+    cols = jnp.arange(batch_size, dtype=jnp.int32)
+    fold = jax.vmap(lambda p, bk: p[:, jnp.mod(cols, bk)])
+    return fold(plans, batch_sizes)
 
 
 @dataclass

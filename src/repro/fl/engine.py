@@ -90,12 +90,10 @@ class BatchedEngine:
         self.n_clients = len(fed)
         stacked = stack_federation(fed)
         self.n_samples = stacked.n_samples
-        if int(self.n_samples.min()) < batch_size:
-            raise ValueError(
-                f"BatchedEngine needs n_k >= batch_size for fixed-shape "
-                f"minibatches (min n_k={int(self.n_samples.min())}, "
-                f"batch_size={batch_size}); use LegacyEngine for short-batch "
-                f"clients")
+        # NOTE: n_k >= batch_size is a restriction of the HOST epoch-cursor
+        # planner only (it slices fixed windows from the epoch permutation)
+        # and is enforced at first host-plan use — counter plans draw
+        # bounded by n_k, so short-batch clients federate fine there
         self._x = jnp.asarray(stacked.x)
         self._y = jnp.asarray(stacked.y)
         self._n_dev = jnp.asarray(self.n_samples, jnp.int32)
@@ -107,6 +105,11 @@ class BatchedEngine:
         # the fused round and by the host reference compared against it
         self.plan = "host"
         self._plan_key = None
+        # optional per-client hyperparameter heterogeneity: (K,) arrays
+        # installed by set_heterogeneity (None = homogeneous — the exact
+        # historical program)
+        self._steps_k = None
+        self._batch_k = None
 
     @classmethod
     def from_clients(cls, clients: List[FLClient]) -> "BatchedEngine":
@@ -122,23 +125,86 @@ class BatchedEngine:
                    local_steps=c0.local_steps)
 
     # ------------------------------------------------------------------
-    def _train_one(self, params, xc, yc, plan):
+    def set_heterogeneity(self, steps_k=None, batch_k=None) -> None:
+        """Install per-client (K,) hyperparameter heterogeneity: local-step
+        counts (1 <= steps_k <= local_steps — extra plan rows become no-op
+        steps via a zeroed step size) and/or batch sizes (1 <= batch_k <=
+        batch_size — the counter plan repeats each client's first b_k
+        draws cyclically across the fixed-width row, so the averaged
+        gradient is EXACTLY the b_k-minibatch gradient whenever b_k
+        divides batch_size). None leaves a dimension homogeneous. The
+        fused/sharded drivers install these from ``ScenarioConfig
+        .het_steps`` / ``.het_batch``."""
+        if steps_k is not None:
+            s = np.asarray(steps_k)
+            if s.shape != (self.n_clients,):
+                raise ValueError(f"steps_k shape {s.shape} != "
+                                 f"({self.n_clients},)")
+            if s.min() < 1 or s.max() > self.local_steps:
+                raise ValueError(f"steps_k must lie in [1, local_steps="
+                                 f"{self.local_steps}]; got "
+                                 f"[{int(s.min())}, {int(s.max())}]")
+            steps_k = jnp.asarray(s, jnp.int32)
+        if batch_k is not None:
+            bks = np.asarray(batch_k)
+            if bks.shape != (self.n_clients,):
+                raise ValueError(f"batch_k shape {bks.shape} != "
+                                 f"({self.n_clients},)")
+            if bks.min() < 1 or bks.max() > self.batch_size:
+                raise ValueError(f"batch_k must lie in [1, batch_size="
+                                 f"{self.batch_size}]; got "
+                                 f"[{int(bks.min())}, {int(bks.max())}]")
+            batch_k = jnp.asarray(bks, jnp.int32)
+        self._steps_k = steps_k
+        self._batch_k = batch_k
+
+    def steps_for(self, client_ids=None):
+        """This federation's (K,) per-client step counts gathered at
+        ``client_ids`` (None = all rows; returns None when homogeneous) —
+        the form ``_train_all``/``_train_all_tree`` consume."""
+        if self._steps_k is None:
+            return None
+        if client_ids is None:
+            return self._steps_k
+        return self._steps_k[jnp.asarray(client_ids, jnp.int32)]
+
+    def _train_one(self, params, xc, yc, plan, n_steps=None):
         """One client's M local SGD steps from the broadcast ``params``
-        pytree; returns the trained params pytree (no ravel)."""
+        pytree; returns the trained params pytree (no ravel).
+
+        ``n_steps`` (traced scalar) masks heterogeneous step counts: plan
+        rows at positions >= n_steps multiply their gradient by an exactly
+        zero step size, so ``pp - 0 * gg == pp`` bit for bit and a client
+        with n_steps = s equals the s-step homogeneous run on the same
+        plan rows. ``None`` keeps the historical unmasked program."""
         def step(p, sel):
             batch = {"x": xc[sel], "y": yc[sel]}
             g = jax.grad(self.loss_fn)(p, batch)
             return jax.tree_util.tree_map(
                 lambda pp, gg: pp - self.lr * gg, p, g), None
+
+        def masked_step(p, inp):
+            sel, i = inp
+            batch = {"x": xc[sel], "y": yc[sel]}
+            g = jax.grad(self.loss_fn)(p, batch)
+            lr = jnp.float32(self.lr) * (i < n_steps)
+            return jax.tree_util.tree_map(
+                lambda pp, gg: pp - lr * gg, p, g), None
         # M is small (a handful of local steps): full unroll lets XLA
         # fuse across steps instead of paying while-loop overhead
-        p, _ = jax.lax.scan(step, params, plan, unroll=True)
+        if n_steps is None:
+            p, _ = jax.lax.scan(step, params, plan, unroll=True)
+        else:
+            pos = jnp.arange(plan.shape[0], dtype=jnp.int32)
+            p, _ = jax.lax.scan(masked_step, params, (plan, pos),
+                                unroll=True)
         return p
 
-    def _train_all(self, params, x, y, idx):
+    def _train_all(self, params, x, y, idx, n_steps=None):
         """params: pytree of (…) broadcast to every client; x/y: padded
-        (K, n_max, …) data; idx: (K, M, B) minibatch plans. Returns
-        (K, d) raveled trained models.
+        (K, n_max, …) data; idx: (K, M, B) minibatch plans; ``n_steps``:
+        optional (K,) heterogeneous step counts. Returns (K, d) raveled
+        trained models.
 
         The ravel happens ONCE on the stacked result — reshape each
         (K, ...) leaf to (K, d_leaf) and concatenate in tree_flatten
@@ -146,21 +212,26 @@ class BatchedEngine:
         (same leaf order, same row-major ravel) but costs one (K, d)
         write instead of a vmapped per-client concatenate (~40% of the
         train call at transformer-scale d)."""
-        trained = self._train_all_tree(params, x, y, idx)
+        trained = self._train_all_tree(params, x, y, idx, n_steps)
         leaves = jax.tree_util.tree_leaves(trained)
         if len(leaves) == 1:
             return leaves[0].reshape((leaves[0].shape[0], -1))
         return jnp.concatenate(
             [l.reshape((l.shape[0], -1)) for l in leaves], axis=1)
 
-    def _train_all_tree(self, params, x, y, idx):
+    def _train_all_tree(self, params, x, y, idx, n_steps=None):
         """Pytree twin of ``_train_all``: same local SGD, but the trained
         models come back as a client-stacked params pytree ((K, ...)
         leaves) instead of a raveled (K, d) matrix — the form the
         pytree-native round core carries (repro.fl.runtime)."""
+        if n_steps is None:
+            return jax.vmap(
+                lambda xc, yc, plan: self._train_one(params, xc, yc, plan)
+            )(x, y, idx)
         return jax.vmap(
-            lambda xc, yc, plan: self._train_one(params, xc, yc, plan)
-        )(x, y, idx)
+            lambda xc, yc, plan, ns: self._train_one(params, xc, yc, plan,
+                                                     ns)
+        )(x, y, idx, n_steps)
 
     def enable_counter_plan(self, key) -> None:
         """Switch minibatch planning to the stateless counter scheme: the
@@ -173,12 +244,20 @@ class BatchedEngine:
     def round_plan(self, round_idx, client_ids=None, n_samples=None):
         """Counter-mode (K, M, B) index plan for broadcast round
         ``round_idx`` (host path and fused path call the same function).
-        A mesh shard passes its ``client_ids`` slice plus the matching
-        ``n_samples`` rows and gets exactly its rows of the full plan."""
+        A mesh shard — or the active cohort — passes its ``client_ids``
+        slice plus the matching ``n_samples`` rows and gets exactly its
+        rows of the full plan (each client's draw depends only on the key
+        and its own id/size). Heterogeneous batch sizes, when installed,
+        gather by the same ids."""
         key = round_tag_key(self._plan_key, round_idx, TAG_BATCH)
         n = self._n_dev if n_samples is None else n_samples
+        bs = None
+        if self._batch_k is not None:
+            bs = (self._batch_k if client_ids is None
+                  else self._batch_k[jnp.asarray(client_ids, jnp.int32)])
         return counter_batch_plan(key, n, self.local_steps,
-                                  self.batch_size, client_ids=client_ids)
+                                  self.batch_size, client_ids=client_ids,
+                                  batch_sizes=bs)
 
     def _broadcast_plans(self, ids, round_idx):
         """(K, M, B) index plans for a broadcast of ``ids``: the full
@@ -189,6 +268,14 @@ class BatchedEngine:
                 raise ValueError("counter-plan engine needs the broadcast "
                                  "round index")
             return self.round_plan(int(round_idx))
+        if int(self.n_samples.min()) < self.batch_size:
+            raise ValueError(
+                f"host epoch-cursor plans need n_k >= batch_size for "
+                f"fixed-shape minibatches (min n_k="
+                f"{int(self.n_samples.min())}, batch_size="
+                f"{self.batch_size}); use counter plans "
+                f"(enable_counter_plan) or LegacyEngine for short-batch "
+                f"clients")
         self._idx[:] = 0
         for k in ids:
             self._idx[k] = np.stack(list(
@@ -209,7 +296,7 @@ class BatchedEngine:
         caller."""
         ids = np.asarray(ids, np.int64)
         idx = self._broadcast_plans(ids, round_idx)
-        return self._train(params, self._x, self._y, idx)
+        return self._train(params, self._x, self._y, idx, self._steps_k)
 
     def local_train(self, params, ids: Sequence[int],
                     round_idx=None) -> np.ndarray:

@@ -33,11 +33,14 @@ import numpy as np
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
 from repro.core.aggregation import ravel
 from repro.core.power_control import p2_constants
-from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
-                                  counter_latencies, round_tag_key)
+from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, TAG_SCHED,
+                                  SchedulerConfig, counter_latencies,
+                                  round_tag_key, scenario_hyperparams,
+                                  scenario_latencies, scenario_masks)
 from repro.fl.engine import BatchedEngine, make_engine
 from repro.fl.runtime import (RoundCarry, RoundCfg, RoundStreams,
-                              init_round_carry, scan_rounds)
+                              init_cohort_carry, init_round_carry,
+                              scan_rounds)
 from repro.fl.server import PAOTAConfig
 
 __all__ = ["FusedPAOTA", "RoundCarry"]
@@ -74,12 +77,25 @@ class FusedPAOTA:
     every reduction still accumulates f32 and the globals stay f32.
     ``donate=False`` disables carry donation into the scan (the default
     donates; kept as a flag for the donation-safety equivalence test).
+
+    ``cohort_size=m`` switches the carry to the active-cohort layout: at
+    most m clients in flight, model-sized rows for those m slots only —
+    the (K,) scheduler/scenario state plane stays dense and tiny, so the
+    carry footprint stops scaling as K x d (``None``/0 keeps the dense
+    carry, bit-identical to prior releases). ``scenario`` (a
+    ``repro.core.scheduler.ScenarioConfig``) runs the vectorized
+    client-state simulator — availability cycles, dropouts, lognormal
+    responsiveness, per-client local-step/batch heterogeneity — entirely
+    inside the scan from the scheduler's counter-RNG streams; the default
+    ``ScenarioConfig()`` is the identity scenario (bit-identical to
+    ``scenario=None``).
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
                  params_mode: str = "raveled",
-                 pending_dtype: str = "float32", donate: bool = True):
+                 pending_dtype: str = "float32", donate: bool = True,
+                 cohort_size: int | None = None, scenario=None):
         if params_mode not in ("raveled", "pytree"):
             raise ValueError(f"params_mode={params_mode!r} (expected "
                              "'raveled' or 'pytree')")
@@ -112,6 +128,11 @@ class FusedPAOTA:
             self._init_global = self._init_vec
         self.d = int(vec.size)
         self.k = engine.n_clients
+        self.scenario = scenario
+        self.cohort_size = int(cohort_size) if cohort_size else 0
+        if self.cohort_size and not 1 <= self.cohort_size <= self.k:
+            raise ValueError(f"cohort_size={self.cohort_size} must lie in "
+                             f"[1, K={self.k}]")
         c1, c0 = p2_constants(cfg.smooth_l, cfg.eps_bound, self.k, self.d,
                               chan.sigma_n2)
         # chan.sigma_n is a concrete float (jnp.sqrt is not callable through
@@ -121,10 +142,18 @@ class FusedPAOTA:
                               sigma_n=chan.sigma_n,
                               delta_t=sched_cfg.delta_t,
                               transmit_delta=cfg.transmit == "delta",
-                              pending_dtype=pending_dtype)
+                              pending_dtype=pending_dtype,
+                              cohort_size=self.cohort_size)
         self._lat_key = jax.random.PRNGKey(sched_cfg.seed)
         self._srv_key = jax.random.PRNGKey(cfg.seed)
         engine.enable_counter_plan(self._srv_key)
+        if scenario is not None and (scenario.het_steps or
+                                     scenario.het_batch):
+            # static per-client hyperparameter traits, drawn once from the
+            # scheduler's trait stream and installed on the engine
+            steps_k, batch_k = scenario_hyperparams(self._lat_key, self.k,
+                                                    scenario)
+            engine.set_heterogeneity(steps_k, batch_k)
         self._carry: RoundCarry | None = None
         self.history: List[dict] = []
         self._jit_init = jax.jit(self._init_carry)
@@ -147,28 +176,75 @@ class FusedPAOTA:
         params tree in, client-stacked tree out (same SGD ops — ravel is
         the only difference)."""
         idx = self.engine.round_plan(broadcast_round)
+        steps = self.engine.steps_for()
         if self.params_mode == "pytree":
-            return self.engine._train_all_tree(global_state, x, y, idx)
+            return self.engine._train_all_tree(global_state, x, y, idx,
+                                               steps)
         params = self.unravel(global_state)
-        return self.engine._train_all(params, x, y, idx)
+        return self.engine._train_all(params, x, y, idx, steps)
+
+    def _cohort_train(self, global_state, x, y, broadcast_round, ids):
+        """Cohort twin of ``_local_train_all``: gather the (m,) scheduled
+        clients' data rows and train ONLY those — each client's minibatch
+        plan / heterogeneity traits key on its global id, so a client's
+        trained row is identical whichever slot (or dense row) computes
+        it."""
+        ids = ids.astype(jnp.uint32)
+        idx = self.engine.round_plan(broadcast_round, client_ids=ids,
+                                     n_samples=self.engine._n_dev[ids])
+        steps = self.engine.steps_for(ids)
+        xs, ys = x[ids], y[ids]
+        if self.params_mode == "pytree":
+            return self.engine._train_all_tree(global_state, xs, ys, idx,
+                                               steps)
+        return self.engine._train_all(self.unravel(global_state), xs, ys,
+                                      idx, steps)
 
     def _streams(self) -> RoundStreams:
         """Single-device streams: callbacks see the whole federation, so
-        the round core's (K,) rows are the global client set."""
+        the round core's (K,) rows are the global client set. The scenario
+        mask callback stays None unless the scenario can actually mask —
+        the round core's dense program is then untouched at trace time."""
+        sc = self.scenario
+        if sc is None:
+            lat = lambda r: counter_latencies(
+                self._lat_key, r, self.k, self.sched_cfg.lat_lo,
+                self.sched_cfg.lat_hi)
+        else:
+            # "uniform" responsiveness delegates to counter_latencies
+            # verbatim inside scenario_latencies — bit-identical draws
+            lat = lambda r: scenario_latencies(
+                self._lat_key, r, self.k, self.sched_cfg.lat_lo,
+                self.sched_cfg.lat_hi, sc)
+        scen = None
+        if sc is not None and sc.has_masks:
+            scen = lambda t: scenario_masks(self._lat_key, t, self.k, sc)
+        cohort_train = sched_priority = None
+        if self.cohort_size:
+            cohort_train = self._cohort_train
+            sched_priority = lambda r: jax.random.uniform(
+                round_tag_key(self._lat_key, r, TAG_SCHED), (self.k,))
         return RoundStreams(
             local_train=self._local_train_all,
-            latencies=lambda r: counter_latencies(
-                self._lat_key, r, self.k, self.sched_cfg.lat_lo,
-                self.sched_cfg.lat_hi),
+            latencies=lat,
             channel=lambda t: sample_channel_gains(
                 round_tag_key(self._srv_key, t, TAG_CHANNEL), self.k,
                 self.chan),
             noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
+            scenario=scen,
+            cohort_train=cohort_train,
+            sched_priority=sched_priority,
         )
 
     def _init_carry(self, vec, x, y) -> RoundCarry:
         # transmit='delta' never reads the full local models: the carry is
         # the delta plane alone (half the K x d working set)
+        if self.cohort_size:
+            return init_cohort_carry(
+                vec, x, y, streams=self._streams(), k=self.k,
+                m=self.cohort_size,
+                pending_dtype=self._rcfg.pending_dtype,
+                keep_pending=not self._rcfg.transmit_delta)
         return init_round_carry(vec, x, y, streams=self._streams(),
                                 pending_dtype=self._rcfg.pending_dtype,
                                 keep_pending=not self._rcfg.transmit_delta)

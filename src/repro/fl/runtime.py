@@ -56,6 +56,19 @@ update -> broadcast + local train. It is parameterized by
   the P2 water-filling reductions, and the round metrics cross shards as
   ``psum``/``pmin``/``pmax`` collectives.
 
+Active-cohort mode (``RoundCfg.cohort_size`` m >= 1) splits the carry
+into TWO planes: a dense (K,) client-state plane — scheduler bits,
+staleness clocks, and the vectorized scenario simulator
+(``repro.core.scheduler.ScenarioConfig``: availability cycles, dropouts,
+lognormal responsiveness), all O(K) scalars advanced inside the scan —
+and an (m, ...) active-cohort payload plane holding model-sized rows for
+the in-flight cohort only (``slot_client`` / ``slot_live``). Freed slots
+refill from the available idle pool by counter-RNG priority. The K x d
+carry stops scaling with K: a K = 10^6 federation advances its state
+plane on one host while only m payload rows materialize
+(benchmarks/cohort_round_bench.py). ``cohort_size=0`` (the default) is
+the historical dense program, bit for bit.
+
 Consumers: ``repro.fl.fused.FusedPAOTA`` (single device, scan over
 rounds, carry donated between scans), ``repro.fl.sharded.ShardedPAOTA``
 (the same scan under ``shard_map`` over the mesh client axis), and the
@@ -129,6 +142,18 @@ class RoundCarry(NamedTuple):
                               # cross-pod sync; sharded over the pod axes,
                               # replicated intra-pod, zeroed at every sync.
                               # None on the flat path.
+    slot_client: jnp.ndarray = None  # active-cohort mode only
+                              # (cohort_size m >= 1): (m,) i32 — which client
+                              # occupies each payload slot (shard-LOCAL row
+                              # index under sharding). The (K,) state plane
+                              # stays dense and tiny; `pending`/`deltas`
+                              # shrink to (m, ...) rows gathered for the
+                              # in-flight cohort only, so the K x d carry
+                              # stops scaling with K. None on the dense path.
+    slot_live: jnp.ndarray = None    # (m,) bool — slot holds a real
+                              # in-flight client (False = phantom row:
+                              # b_k = 0 through every reduction, exactly the
+                              # sharded drivers' phantom-client masking)
 
 
 class RoundCfg(NamedTuple):
@@ -148,6 +173,11 @@ class RoundCfg(NamedTuple):
                               # style): 0 = flat (cross-shard sync every
                               # period); N >= 1 = intra-pod partials every
                               # period, ONE cross-pod psum every N periods
+    cohort_size: int = 0      # active-cohort mode: 0 = dense (every client
+                              # carries a payload row — bit-identical to the
+                              # historical round); m >= 1 = at most m clients
+                              # in flight, payload planes are (m, ...) slot
+                              # rows (gather on schedule, scatter on upload)
 
 
 class GroupTopology(NamedTuple):
@@ -175,6 +205,18 @@ class RoundStreams(NamedTuple):
     latencies: Callable       # (round) -> (K_local,) latency draws
     channel: Callable         # (round) -> (K_local,) |h_k| draws
     noise_key: Callable       # (round) -> AWGN key (replicated)
+    scenario: Callable = None # (round) -> ((K_local,) available,
+                              # (K_local,) dropped) bool masks, or None —
+                              # None skips the mask stage at TRACE time, so
+                              # the no-scenario program stays bit-identical
+    cohort_train: Callable = None  # cohort mode: (global tree, x, y, round,
+                              # (m,) slot client ids) -> (m, ...) stacked
+                              # trained tree — the m-row twin of local_train
+    sched_priority: Callable = None  # cohort mode: (round) -> (K_local,)
+                              # f32 scheduling scores; highest-score idle
+                              # available clients fill freed slots. Rows
+                              # pinned to -inf are never schedulable (the
+                              # sharded drivers' phantom fill).
 
 
 # ---------------------------------------------------------------------------
@@ -269,7 +311,20 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     period is a sync with held == 0, and since x + 0 is exact the program
     is op-for-op the flat path — grouped N=1 equals flat by construction.
 
+    Active-cohort mode (``rcfg.cohort_size`` m >= 1): the payload planes
+    are (m, ...) slot rows instead of (K, ...) — the round gathers channel/
+    staleness state for the in-flight cohort, runs the identical stats /
+    water-filling / AirComp stages over m rows, and scatters the scheduler
+    effects back into the dense-but-tiny (K,) state plane
+    (``_cohort_round_step``). Incompatible with grouped aggregation.
+
     Returns (next_carry, per-round metrics dict of replicated scalars)."""
+    if rcfg.cohort_size:
+        if grouping is not None:
+            raise NotImplementedError("active-cohort mode does not compose "
+                                      "with grouped aggregation yet")
+        return _cohort_round_step(carry, x, y, rcfg=rcfg, streams=streams,
+                                  axis_name=axis_name)
     k_local = carry.ready.shape[0]
     grouped = grouping is not None and rcfg.group_period >= 1
     sync = (not grouped) or (window_j == rcfg.group_period - 1)
@@ -286,8 +341,21 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     time = (carry.t + 1).astype(jnp.float32) * jnp.float32(rcfg.delta_t)
     ready, stal = sched_advance(carry.ready, carry.busy_lat,
                                 carry.model_round, carry.t, rcfg.delta_t)
-    b = ready.astype(jnp.float32)
-    stal = stal.astype(jnp.float32)
+    if streams.scenario is None:
+        # no scenario: uploaders = restarters = the ready set — this branch
+        # is the historical program, bit-identical op for op
+        upl = restart = ready
+    else:
+        # scenario masks (trace-time branch: the callback is None unless a
+        # scenario can actually mask): unavailable-but-ready clients HOLD
+        # their finished update and stay ready for a later slot (staleness
+        # keeps growing); dropped uploads are lost in transit but the
+        # client still restarts from the fresh broadcast
+        avail, drop = streams.scenario(carry.t)
+        upl = ready & avail & ~drop
+        restart = ready & avail
+    b = upl.astype(jnp.float32)
+    stal = jnp.where(upl, stal, 0).astype(jnp.float32)
 
     # 2. staleness + gradient-similarity factors (eq. 25) + the payload
     # norms for constraint (7): ONE sweep over the carried delta plane
@@ -353,19 +421,20 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         varsigma = jnp.float32(0.0)
         new_global, new_prev = carry.global_vec, carry.prev_global
 
-    # 7. broadcast w^{r+1}: every uploader restarts local training (at a
+    # 7. broadcast w^{r+1}: every restarter — uploader, or dropped uploader
+    # whose update was lost in transit — begins fresh local training (at a
     # grouped non-sync period the rebroadcast model is the held global).
     # The carry's delta rows are refreshed as f32 ``trained - w_g^{r+1}``
     # BEFORE the storage cast.
     t_next = carry.t + 1
     lat = streams.latencies(t_next)
     n_ready, n_lat, n_model = sched_broadcast(
-        ready, carry.busy_lat, carry.model_round, ready, lat, t_next)
+        ready, carry.busy_lat, carry.model_round, restart, lat, t_next)
     trained = streams.local_train(new_global, x, y, t_next)
     dtype = _storage_dtype(rcfg)
 
     def row_select(new, old):
-        m = ready.reshape((k_local,) + (1,) * (new.ndim - 1))
+        m = restart.reshape((k_local,) + (1,) * (new.ndim - 1))
         return jnp.where(m, new, old)
 
     pending = None if carry.pending is None else jax.tree_util.tree_map(
@@ -427,6 +496,154 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     return carry, out
 
 
+def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
+                       streams: RoundStreams, axis_name=None):
+    """Active-cohort form of the round: (K,) state plane + (m, d) payload
+    plane.
+
+    The scheduler/simulator state (``ready``, ``busy_lat``,
+    ``model_round`` — plus the scenario masks) stays a dense (K,) plane:
+    tiny, O(K) not O(K d). Model-sized rows exist ONLY for the m slots of
+    the in-flight cohort (``slot_client`` maps slot -> client row,
+    ``slot_live`` masks unfilled slots exactly like the sharded drivers'
+    phantom clients), so the eq.-25 stats, water-filling, constraint (7),
+    and AirComp stages — unchanged, shape-agnostic in their leading axis —
+    run over m rows. Idle clients sit at ``busy_lat = +inf`` (the
+    ``slot_ready`` predicate can never flip them), and freed slots are
+    refilled from the available idle pool by counter-RNG priority
+    (``streams.sched_priority``; descending ``lax.top_k``) — an O(K log K)
+    sort-plane op, no Python priority queue.
+
+    Equivalences: at m = K (every client permanently slotted) the step is
+    the dense round up to slot permutation — same uploader sets, same
+    per-client draws, float reduction order the only difference. An
+    all-masked cohort (b = 0 everywhere) hits the same zero-uploader guard
+    as the dense path, holding w_g bit-identically."""
+    k_local = carry.ready.shape[0]
+    occ, live = carry.slot_client, carry.slot_live
+    m = occ.shape[0]
+
+    def ksum(v, axis=None):
+        s = jnp.sum(v, axis=axis)
+        return s if axis_name is None else jax.lax.psum(s, axis_name)
+
+    # 1. (K,) state plane advance + scenario masks (same stages as the
+    # dense step — sched_advance only ever flips clients whose carried
+    # latency draw is finite, i.e. the in-flight cohort)
+    time = (carry.t + 1).astype(jnp.float32) * jnp.float32(rcfg.delta_t)
+    ready, stal_k = sched_advance(carry.ready, carry.busy_lat,
+                                  carry.model_round, carry.t, rcfg.delta_t)
+    if streams.scenario is None:
+        avail = jnp.ones((k_local,), bool)
+        upl_k = depart_k = ready
+    else:
+        avail, drop = streams.scenario(carry.t)
+        upl_k = ready & avail & ~drop
+        depart_k = ready & avail
+
+    # slot view of the (K,) state: gather by occupant, mask dead slots
+    b = (live & upl_k[occ]).astype(jnp.float32)
+    stal = jnp.where(live, stal_k[occ], 0).astype(jnp.float32)
+
+    # 2-4. identical per-row stages over the m cohort rows (sweep 1: fused
+    # stats; P2 water-filling; constraint (7) under the gathered channel)
+    payload = carry.deltas if rcfg.transmit_delta else carry.pending
+    rho, theta, w_norm2 = round_factors(
+        carry.deltas, None if rcfg.transmit_delta else carry.pending,
+        carry.global_vec, carry.prev_global, stal, rcfg.omega)
+    p_max = jnp.full((m,), rcfg.p_max_watts, jnp.float32)
+    beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b, rcfg.c1, rcfg.c0,
+                                      axis_name=axis_name)
+    powers = power_from_beta(beta, rho, theta, p_max)
+    h = jnp.where(live, streams.channel(carry.t)[occ], 0.0)
+    powers = constraint7_powers(powers, payload, h, rcfg.p_max_watts,
+                                w_norm2=w_norm2)
+
+    # 5+6. AirComp over the cohort rows (sweep 2) + the guarded update —
+    # an all-masked cohort degenerates to the zero-uploader hold exactly
+    # like the dense path (varsigma below the guard threshold)
+    agg, varsigma = paota_aggregate_stacked(
+        payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
+        axis_name=axis_name)
+    new_global, new_prev = guarded_global_update(
+        carry.global_vec, carry.prev_global, agg, varsigma,
+        delta=rcfg.transmit_delta)
+
+    # 7a. slot turnover: departing occupants (uploaded, or upload dropped
+    # in transit) free their slots; available idle clients fill them in
+    # priority order. `in_flight` scatters the retained occupancy back to
+    # (K,); dead slots contribute nothing anywhere (live = False).
+    depart = live & depart_k[occ]
+    stay = live & ~depart
+    in_flight = jnp.zeros((k_local,), bool).at[occ].max(stay,
+                                                        mode="drop")
+    prio = streams.sched_priority(carry.t)
+    score = jnp.where(avail & ~in_flight, prio, -jnp.inf)
+    top_score, top_ids = jax.lax.top_k(score, m)
+    n_cand = jnp.sum((top_score > -jnp.inf).astype(jnp.int32))
+    free = ~stay
+    free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+    take = free & (free_rank < n_cand)
+    new_occ = jnp.where(take, top_ids[jnp.clip(free_rank, 0, m - 1)],
+                        occ).astype(jnp.int32)
+    new_live = stay | take
+
+    # 7b. (K,) plane bookkeeping: departed-but-unscheduled clients go idle
+    # (busy_lat = +inf — never ready again until rescheduled), scheduled
+    # clients get the fresh broadcast via the SAME sched_broadcast masked
+    # update the dense path uses
+    sched_k = jnp.zeros((k_local,), bool).at[new_occ].max(take, mode="drop")
+    t_next = carry.t + 1
+    lat_full = streams.latencies(t_next)
+    departed_k = jnp.zeros((k_local,), bool).at[occ].max(depart, mode="drop")
+    idle = departed_k & ~sched_k
+    ready = jnp.where(idle, False, ready)
+    busy = jnp.where(idle, jnp.asarray(jnp.inf, carry.busy_lat.dtype),
+                     carry.busy_lat)
+    n_ready, n_lat, n_model = sched_broadcast(
+        ready, busy, carry.model_round, sched_k, lat_full, t_next)
+
+    # 7c. cohort training: ONLY the m slot rows materialize model-sized
+    # work — the newly scheduled slots take their trained rows (f32 delta
+    # before the storage cast, same rules as the dense path); retained
+    # slots keep their in-flight payload; dead slots keep masked garbage
+    trained = streams.cohort_train(new_global, x, y, t_next, new_occ)
+    dtype = _storage_dtype(rcfg)
+
+    def row_select(new, old):
+        msk = take.reshape((m,) + (1,) * (new.ndim - 1))
+        return jnp.where(msk, new, old)
+
+    pending = None if carry.pending is None else jax.tree_util.tree_map(
+        lambda tr, p: row_select(tr.astype(p.dtype), p),
+        trained, carry.pending)
+    if dtype == jnp.float32 and pending is not None:
+        deltas = jax.tree_util.tree_map(
+            lambda p, dl, g: row_select(p - g[None], dl),
+            pending, carry.deltas, new_global)
+    else:
+        deltas = jax.tree_util.tree_map(
+            lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype), dl),
+            trained, carry.deltas, new_global)
+
+    n_upl = ksum(b)
+    denom = jnp.maximum(n_upl, 1.0)
+    out = {
+        "n_participants": n_upl,
+        "time": time,
+        "mean_staleness": ksum(stal * b) / denom,
+        "beta_mean": ksum(beta * b) / denom,
+        "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
+        "p2_objective": jnp.where(n_upl > 0, p2_obj, jnp.inf),
+    }
+    carry = RoundCarry(t=t_next, time=time, ready=n_ready,
+                       busy_lat=n_lat, model_round=n_model,
+                       global_vec=new_global, prev_global=new_prev,
+                       pending=pending, deltas=deltas, held=None,
+                       slot_client=new_occ, slot_live=new_live)
+    return carry, out
+
+
 def init_round_carry(vec, x, y, *, streams: RoundStreams,
                      pending_dtype: str = "float32",
                      keep_pending: bool = True) -> RoundCarry:
@@ -451,6 +668,47 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams,
         pending=_cast_rows(trained, dtype) if keep_pending else None,
         deltas=jax.tree_util.tree_map(
             lambda tr, g: (tr - g[None]).astype(dtype), trained, vec),
+    )
+
+
+def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
+                      n_real=None, pending_dtype: str = "float32",
+                      keep_pending: bool = True) -> RoundCarry:
+    """Round-0 kick-off of the active-cohort carry: the first
+    ``min(m, n_real)`` clients (in id order) fill the slots and receive
+    the broadcast; everyone else idles at ``busy_lat = +inf`` until a slot
+    frees. ``k``/``m`` are this shard's local extents under sharding;
+    ``n_real`` (static or traced) caps the live slots below the phantom
+    padding — phantom rows must never occupy a live slot. At m = K with
+    no phantoms this is exactly ``init_round_carry`` plus the identity
+    slot map, which is what makes cohort_size=K allclose to the dense
+    path from round 0."""
+    if m > k:
+        raise ValueError(f"cohort_size={m} exceeds the client-plane extent "
+                         f"{k}")
+    occ = jnp.arange(m, dtype=jnp.int32)
+    n_real = k if n_real is None else n_real
+    live = occ < jnp.minimum(jnp.asarray(m, jnp.int32),
+                             jnp.asarray(n_real, jnp.int32))
+    sched_k = jnp.zeros((k,), bool).at[occ].max(live, mode="drop")
+    lat_full = streams.latencies(0)
+    busy = jnp.where(sched_k, lat_full,
+                     jnp.asarray(jnp.inf, lat_full.dtype))
+    trained = streams.cohort_train(vec, x, y, 0, occ)
+    dtype = jnp.dtype(pending_dtype)
+    return RoundCarry(
+        t=jnp.int32(0),
+        time=jnp.float32(0.0),
+        ready=jnp.zeros((k,), bool),
+        busy_lat=busy,
+        model_round=jnp.zeros((k,), jnp.int32),
+        global_vec=vec,
+        prev_global=vec,
+        pending=_cast_rows(trained, dtype) if keep_pending else None,
+        deltas=jax.tree_util.tree_map(
+            lambda tr, g: (tr - g[None]).astype(dtype), trained, vec),
+        slot_client=occ,
+        slot_live=live,
     )
 
 

@@ -49,6 +49,18 @@ them in the HLO). ``group_period=1`` makes every period a sync with a
 zero ``held``, which is op-for-op the flat program — grouped N=1 equals
 flat bit-for-bit (tests/test_grouped_round.py).
 
+Active-cohort mode (``cohort_size=m``): the slots split shard-LOCAL —
+``m`` must tile the client shards, each shard runs the cohort round over
+its ``m / n_shards`` slots and refills them from its OWN idle clients by
+the shared counter-RNG priority draw (phantom rows are pinned to -inf and
+can never win a slot). Slot refill order is therefore per-shard rather
+than the fused driver's global priority order — a documented scheduling
+POLICY difference (same distributions; at m = K both pin every client to
+a permanent slot and the paths coincide). Round-0 cohort init also runs
+inside ``shard_map``: its payload gathers use shard-local slot ids, which
+plain GSPMD jit would misread as global rows. Grouped aggregation does
+not compose with cohort mode yet.
+
 Equivalence contract: every shard consumes its rows of the SAME global
 counter-RNG draws the single-device scan makes — latency and channel
 vectors are drawn full-K from the replicated round key, padded with
@@ -74,11 +86,13 @@ except ImportError:                     # 0.4.x: experimental namespace
     from jax.experimental.shard_map import shard_map
 
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
-from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, SchedulerConfig,
-                                  counter_latencies, round_tag_key)
+from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, TAG_SCHED,
+                                  SchedulerConfig, counter_latencies,
+                                  round_tag_key, scenario_latencies,
+                                  scenario_masks)
 from repro.fl.fused import FusedPAOTA
 from repro.fl.runtime import (GroupTopology, RoundCarry, RoundStreams,
-                              scan_rounds, scan_windows)
+                              init_cohort_carry, scan_rounds, scan_windows)
 from repro.fl.server import PAOTAConfig
 from repro.launch.mesh import data_axes
 from repro.sharding.rules import batch_specs, stack_client_specs
@@ -117,7 +131,8 @@ class ShardedPAOTA(FusedPAOTA):
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
                  mesh=None, client_axes=None, params_mode: str = "raveled",
                  model_cfg=None, pending_dtype: str = "float32",
-                 donate: bool = True, group_period: int = 0, pod_axes=None):
+                 donate: bool = True, group_period: int = 0, pod_axes=None,
+                 cohort_size: int | None = None, scenario=None):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -164,11 +179,17 @@ class ShardedPAOTA(FusedPAOTA):
                 pod_axes=pods, intra_axes=intra,
                 intra_shards=int(math.prod(mesh.shape[a] for a in intra)))
             self.n_pod_groups = int(math.prod(mesh.shape[a] for a in pods))
+        if cohort_size and group_period:
+            raise NotImplementedError(
+                "active-cohort mode does not compose with grouped "
+                "aggregation yet: the held-window partials are dense-plane "
+                "accumulators (pass cohort_size=None or group_period=0)")
         # super() builds the engine, RoundCfg, keys, and jits _run_scan —
         # which the overrides below turn into the shard_map program
         super().__init__(init_params, clients, chan, sched_cfg, cfg,
                          params_mode=params_mode, pending_dtype=pending_dtype,
-                         donate=donate)
+                         donate=donate, cohort_size=cohort_size,
+                         scenario=scenario)
         if group_period:
             self._rcfg = self._rcfg._replace(group_period=group_period)
         # phantom-client padding: pad K to the next multiple of the
@@ -188,6 +209,34 @@ class ShardedPAOTA(FusedPAOTA):
             # (ready stays False so pending never takes them)
             eng._n_dev = jnp.concatenate(
                 [eng._n_dev, jnp.ones((ph,), eng._n_dev.dtype)])
+            # heterogeneity traits pad with the identity hyperparameters
+            # (phantom rows are never consumed, but the gathers by global
+            # id must stay in bounds)
+            pad1 = lambda a: jnp.concatenate(
+                [a, jnp.ones((ph,), a.dtype)])
+            if eng._steps_k is not None:
+                eng._steps_k = pad1(eng._steps_k)
+            if eng._batch_k is not None:
+                eng._batch_k = pad1(eng._batch_k)
+        # the cohort splits into shard-LOCAL slot sets (slot gathers and
+        # the refill top_k never cross shards): m must tile the shards, and
+        # each shard's slots cannot exceed its client rows. Slot refill is
+        # per shard — a policy difference vs the fused driver's global
+        # priority order (documented; at m = K both pin every client to a
+        # permanent slot and match the dense path).
+        self.m_local = 0
+        if self.cohort_size:
+            if self.cohort_size % self.n_shards:
+                raise ValueError(
+                    f"cohort_size={self.cohort_size} must be divisible by "
+                    f"the {self.n_shards} client shards (slots are "
+                    f"shard-local)")
+            self.m_local = self.cohort_size // self.n_shards
+            if self.m_local > self.k_local:
+                raise ValueError(
+                    f"cohort_size={self.cohort_size} gives {self.m_local} "
+                    f"slots per shard but each shard holds only "
+                    f"{self.k_local} client rows")
         ax = axes if len(axes) != 1 else axes[0]
         self._ax = ax
         if params_mode == "pytree":
@@ -213,12 +262,16 @@ class ShardedPAOTA(FusedPAOTA):
             held_spec = P(pods[0] if len(pods) == 1 else pods, None)
         else:
             held_spec = None
+        slot_spec = P(ax) if self.cohort_size else None
         self._carry_specs = RoundCarry(
             t=P(), time=P(), ready=P(ax), busy_lat=P(ax),
             model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
             # transmit='delta' carries no pending plane (None subtree)
             pending=None if self._rcfg.transmit_delta else pend_spec,
-            deltas=pend_spec, held=held_spec)
+            # cohort mode: the payload planes' leading axis is the m slots
+            # (m_local per shard) — same specs, smaller extent
+            deltas=pend_spec, held=held_spec,
+            slot_client=slot_spec, slot_live=slot_spec)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
@@ -258,11 +311,24 @@ class ShardedPAOTA(FusedPAOTA):
             return jnp.concatenate(
                 [v, jnp.full((self.n_phantom,), fill, v.dtype)])
 
+        scen = None
+        if base.scenario is not None:
+            def scen(t):
+                avail, drop = base.scenario(t)
+                return pad_fill(avail, False), pad_fill(drop, False)
+        prio = None
+        if base.sched_priority is not None:
+            # -inf score = never schedulable: phantoms can win a slot in no
+            # round (the refill gate is score > -inf)
+            prio = lambda r: pad_fill(base.sched_priority(r), -jnp.inf)
         return RoundStreams(
             local_train=base.local_train,   # engine arrays already padded
             latencies=lambda r: pad_fill(base.latencies(r), jnp.inf),
             channel=lambda t: pad_fill(base.channel(t), 0.0),
             noise_key=base.noise_key,
+            scenario=scen,
+            cohort_train=base.cohort_train,  # gathers by id: already padded
+            sched_priority=prio,
         )
 
     # ------------------------------------------------------------------
@@ -298,18 +364,58 @@ class ShardedPAOTA(FusedPAOTA):
                     + jnp.arange(k_loc, dtype=jnp.uint32))
             idx = self.engine.round_plan(r, client_ids=cids,
                                          n_samples=slice_k(n_dev))
+            steps = self.engine.steps_for(cids)
             if self.params_mode == "pytree":
-                return self.engine._train_all_tree(global_state, x, y, idx)
+                return self.engine._train_all_tree(global_state, x, y, idx,
+                                                   steps)
             return self.engine._train_all(self.unravel(global_state), x, y,
-                                          idx)
+                                          idx, steps)
+
+        def cohort_train(global_state, x, y, r, ids):
+            # slot ids are shard-LOCAL rows of (x, y); every draw keys on
+            # the GLOBAL client id, so a client's trained row is identical
+            # whichever shard/slot computes it
+            gids = (offset.astype(jnp.uint32) + ids.astype(jnp.uint32))
+            idx = self.engine.round_plan(r, client_ids=gids,
+                                         n_samples=n_dev[gids])
+            steps = self.engine.steps_for(gids)
+            xs, ys = x[ids], y[ids]
+            if self.params_mode == "pytree":
+                return self.engine._train_all_tree(global_state, xs, ys, idx,
+                                                   steps)
+            return self.engine._train_all(self.unravel(global_state), xs, ys,
+                                          idx, steps)
+
+        scn = self.scenario
+        if scn is None:
+            lat = lambda r: pad_slice(counter_latencies(
+                self._lat_key, r, k, sc.lat_lo, sc.lat_hi), jnp.inf)
+        else:
+            lat = lambda r: pad_slice(scenario_latencies(
+                self._lat_key, r, k, sc.lat_lo, sc.lat_hi, scn), jnp.inf)
+        scen_cb = None
+        if scn is not None and scn.has_masks:
+            def scen_cb(t):
+                avail, drop = scenario_masks(self._lat_key, t, k, scn)
+                return pad_slice(avail, False), pad_slice(drop, False)
+        prio = None
+        if self.cohort_size:
+            # the SAME full-K priority draw the fused driver makes, this
+            # shard's rows, phantoms pinned -inf (never schedulable); the
+            # refill top_k itself is shard-local — a documented policy
+            # difference vs the fused driver's global priority order
+            prio = lambda r: pad_slice(jax.random.uniform(
+                round_tag_key(self._lat_key, r, TAG_SCHED), (k,)), -jnp.inf)
 
         return RoundStreams(
             local_train=local_train,
-            latencies=lambda r: pad_slice(counter_latencies(
-                self._lat_key, r, k, sc.lat_lo, sc.lat_hi), jnp.inf),
+            latencies=lat,
             channel=lambda t: pad_slice(sample_channel_gains(
                 round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan), 0.0),
             noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
+            scenario=scen_cb,
+            cohort_train=cohort_train if self.cohort_size else None,
+            sched_priority=prio,
         )
 
     # ------------------------------------------------------------------
@@ -319,6 +425,30 @@ class ShardedPAOTA(FusedPAOTA):
     # override below only adds the zeroed held slot)
     # ------------------------------------------------------------------
     def _init_carry(self, vec, x, y) -> RoundCarry:
+        if self.cohort_size:
+            # cohort init gathers data/payload rows by shard-LOCAL slot ids,
+            # so it must run INSIDE shard_map (under plain GSPMD jit those
+            # gathers would read global rows). Each shard seeds its first
+            # m_local slots from its own real clients; a shard whose rows
+            # are all phantom padding starts with every slot dead.
+            glob_spec = self._carry_specs.global_vec
+
+            def body(v, xs, ys):
+                offset = self._shard_offset()
+                n_real = jnp.clip(jnp.int32(self.k) - offset, 0,
+                                  self.k_local)
+                return init_cohort_carry(
+                    v, xs, ys, streams=self._shard_streams(offset),
+                    k=self.k_local, m=self.m_local, n_real=n_real,
+                    pending_dtype=self._rcfg.pending_dtype,
+                    keep_pending=not self._rcfg.transmit_delta)
+
+            smap = shard_map(body, self.mesh,
+                             in_specs=(glob_spec, self._x_spec,
+                                       self._y_spec),
+                             out_specs=self._carry_specs,
+                             check_rep=True)
+            return smap(vec, x, y)
         carry = super()._init_carry(vec, x, y)
         if self._grouping is not None:
             carry = carry._replace(held=jnp.zeros(

@@ -13,6 +13,11 @@ streaming form is the memory-bound kernel the roofline wants: bytes moved
 Tiling: grid over D in BLOCK_D-wide stripes (lane-dim multiples of 128);
 the K axis stays resident in VMEM per stripe ((K, BLOCK_D) tile). The
 reduction over K is a (1,K)x(K,BLOCK_D) matmul -> MXU-friendly.
+
+The leading (client) axis is whatever plane the round carries: all K
+clients on the dense path, or the (m, d) active-cohort slot rows under
+``RoundCfg.cohort_size`` — dead/masked slots superpose with b*p = 0, so
+the same kernel serves both layouts unchanged.
 """
 from __future__ import annotations
 

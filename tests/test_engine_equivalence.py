@@ -113,9 +113,17 @@ def test_counter_plan_mode_trains_and_is_stateless(data):
 
 
 def test_batched_engine_rejects_short_clients(data):
+    """n_k < batch_size is a restriction of the HOST epoch-cursor planner
+    only: construction succeeds, epoch-cursor plans refuse, and counter
+    plans (which wrap short clients cyclically) train fine."""
     clients = _clients(data, batch_size=512)   # > smallest client
-    with pytest.raises(ValueError):
-        BatchedEngine.from_clients(clients)
+    eng = BatchedEngine.from_clients(clients)
+    params = init_mlp_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="n_k >= batch_size"):
+        eng.local_train(params, np.arange(K))
+    eng.enable_counter_plan(jax.random.PRNGKey(0))
+    out = eng.local_train(params, np.arange(K), round_idx=0)
+    assert np.isfinite(np.asarray(out)).all()
 
 
 def test_paota_server_equivalence_over_rounds(data):

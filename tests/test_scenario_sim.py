@@ -1,0 +1,246 @@
+"""Vectorized client-state scenario simulator (availability cycles,
+dropouts, responsiveness models, hyperparameter heterogeneity).
+
+The load-bearing claims:
+
+* the host scheduler and a pure-jnp replica of the fused scan's state
+  transition consume IDENTICAL counter-RNG draws — the per-round
+  availability/dropout masks and the uploader/restart sets are equal
+  draw for draw at every round (satellite of the active-cohort PR);
+* the DEFAULT ``ScenarioConfig()`` is the identity scenario: running the
+  fused driver with it is bit-identical to ``scenario=None``;
+* heterogeneity is exact, not approximate: a client capped at n local
+  steps matches the n-step-truncated plan run, and a cyclic small-batch
+  plan reproduces the b_k-minibatch gradient when b_k divides B.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import (ChannelConfig, ScenarioConfig, SchedulerConfig,
+                        scenario_hyperparams, scenario_latencies,
+                        scenario_masks)
+from repro.core.scheduler import (SemiAsyncScheduler, sched_advance,
+                                  sched_broadcast)
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation, counter_batch_plan
+from repro.data.synthetic import make_mnist_like
+from repro.fl import FLClient, FusedPAOTA, PAOTAConfig
+from repro.models.mlp import init_mlp_params, mlp_loss
+
+K = 8
+
+SCENARIO = ScenarioConfig(availability="cycle", avail_period=4,
+                          avail_duty=0.5, dropout_prob=0.25,
+                          responsiveness="lognormal")
+
+
+@pytest.fixture(scope="module")
+def world():
+    x, y, _, _ = make_mnist_like(n_train=1500, n_test=10)
+    parts = partition_noniid(y, n_clients=K, seed=0)
+    return x, y, parts
+
+
+def _clients(world, **kw):
+    x, y, parts = world
+    kw = dict(batch_size=32, lr=0.1, local_steps=5) | kw
+    return [FLClient(d, mlp_loss, **kw) for d in build_federation(x, y, parts)]
+
+
+def _fused(world, **kw):
+    return FusedPAOTA(init_mlp_params(jax.random.PRNGKey(0)),
+                      _clients(world), ChannelConfig(),
+                      SchedulerConfig(n_clients=K, seed=1),
+                      PAOTAConfig(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# host scheduler == jnp state transition, draw for draw
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", [
+    SCENARIO,
+    ScenarioConfig(availability="bernoulli", avail_prob=0.6,
+                   dropout_prob=0.1),
+])
+def test_host_and_jnp_simulators_draw_identical_masks(scenario):
+    """The host ``SemiAsyncScheduler(scenario=...)`` and a pure-jnp replica
+    of the fused scan's transition (``sched_advance`` + ``scenario_masks``
+    + ``sched_broadcast``) produce bit-identical upload/restart masks and
+    scheduler state at EVERY round — they key the same counter streams."""
+    cfg = SchedulerConfig(n_clients=K, seed=3, delta_t=8.0, rng="counter")
+    sch = SemiAsyncScheduler(cfg, scenario=scenario)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    # jnp replica of the carry state (mirrors the fused round's fields)
+    ready = jnp.zeros((K,), bool)
+    busy = jnp.zeros((K,), jnp.float32)
+    model_round = jnp.zeros((K,), jnp.int32)
+
+    # round-0 broadcast to everyone (the servers' __init__ contract)
+    sch.start_round(np.arange(K))
+    lat = scenario_latencies(key, 0, K, cfg.lat_lo, cfg.lat_hi, scenario)
+    ready, busy, model_round = sched_broadcast(
+        ready, busy, model_round, jnp.ones((K,), bool), lat, jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(busy), sch.busy_lat)
+
+    for r in range(12):
+        uploaders, _ = sch.advance_to_aggregation()
+        ready, _ = sched_advance(ready, busy, model_round, jnp.int32(r),
+                                 cfg.delta_t)
+        avail, drop = scenario_masks(key, r, K, scenario)
+        upl = ready & avail & ~drop
+        restart = ready & avail
+        np.testing.assert_array_equal(np.flatnonzero(np.asarray(upl)),
+                                      uploaders)
+        np.testing.assert_array_equal(np.flatnonzero(np.asarray(restart)),
+                                      sch.restart_ids)
+        sch.start_round(sch.restart_ids)
+        lat = scenario_latencies(key, r + 1, K, cfg.lat_lo, cfg.lat_hi,
+                                 scenario)
+        ready, busy, model_round = sched_broadcast(
+            ready, busy, model_round, restart, lat, jnp.int32(r + 1))
+        np.testing.assert_array_equal(np.asarray(ready), sch.ready)
+        np.testing.assert_array_equal(np.asarray(busy), sch.busy_lat)
+        np.testing.assert_array_equal(np.asarray(model_round),
+                                      sch.model_round)
+
+
+def test_scenario_requires_counter_rng():
+    with pytest.raises(ValueError, match="counter"):
+        SemiAsyncScheduler(SchedulerConfig(n_clients=4, rng="host"),
+                           scenario=SCENARIO)
+
+
+def test_scenario_config_validation():
+    with pytest.raises(ValueError):
+        ScenarioConfig(availability="sometimes")
+    with pytest.raises(ValueError):
+        ScenarioConfig(responsiveness="gamma")
+    with pytest.raises(ValueError):
+        ScenarioConfig(dropout_prob=1.0)
+    assert not ScenarioConfig().has_masks
+    assert ScenarioConfig(dropout_prob=0.1).has_masks
+    assert ScenarioConfig(availability="cycle").has_masks
+
+
+# ---------------------------------------------------------------------------
+# identity scenario == no scenario, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_default_scenario_is_identity_bitwise(world):
+    plain = _fused(world)
+    ident = _fused(world, scenario=ScenarioConfig())
+    plain.advance(5)
+    ident.advance(5)
+    np.testing.assert_array_equal(plain.global_vec, ident.global_vec)
+    assert [r["n_participants"] for r in plain.history] == \
+        [r["n_participants"] for r in ident.history]
+
+
+def test_masking_scenario_changes_participation(world):
+    """A masking scenario must actually gate uploads: fewer cumulative
+    participants than the unmasked run, global still finite and sane."""
+    plain = _fused(world)
+    masked = _fused(world, scenario=ScenarioConfig(
+        availability="cycle", avail_period=4, avail_duty=0.5))
+    hp = plain.advance(8)
+    hm = masked.advance(8)
+    assert sum(r["n_participants"] for r in hm) < \
+        sum(r["n_participants"] for r in hp)
+    assert np.isfinite(masked.global_vec).all()
+
+
+# ---------------------------------------------------------------------------
+# responsiveness models
+# ---------------------------------------------------------------------------
+
+def test_uniform_responsiveness_is_counter_latencies_bitwise():
+    from repro.core.scheduler import counter_latencies
+    key = jax.random.PRNGKey(7)
+    sc = ScenarioConfig()      # responsiveness="uniform"
+    for r in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(scenario_latencies(key, r, 32, 5.0, 15.0, sc)),
+            np.asarray(counter_latencies(key, r, 32, 5.0, 15.0)))
+
+
+def test_lognormal_latencies_shape_and_location():
+    key = jax.random.PRNGKey(7)
+    sc = ScenarioConfig(responsiveness="lognormal", lat_shift=2.0,
+                        lat_sigma=0.3, lat_mu_spread=0.5)
+    draws = np.stack([np.asarray(scenario_latencies(key, r, 256, 5.0, 15.0,
+                                                    sc))
+                      for r in range(64)])
+    assert np.isfinite(draws).all()
+    assert (draws > sc.lat_shift).all()
+    # per-client medians spread around the (lo+hi)/2 target (mu_k traits)
+    med = np.median(draws, axis=0)
+    assert 5.0 < np.median(med) < 15.0
+    assert med.std() > 0.5    # heterogeneous device classes, not one speed
+
+
+# ---------------------------------------------------------------------------
+# hyperparameter heterogeneity: exact, not approximate
+# ---------------------------------------------------------------------------
+
+def test_het_steps_equals_truncated_plan(world):
+    """A client capped at n local steps produces EXACTLY the params of
+    running the first n rows of its minibatch plan — the masked-lr scan
+    is a bit-exact truncation, not a re-draw."""
+    from repro.fl.engine import BatchedEngine
+    x, y, parts = world
+    eng = BatchedEngine(build_federation(x, y, parts), mlp_loss,
+                        batch_size=16, lr=0.1, local_steps=5)
+    eng.enable_counter_plan(jax.random.PRNGKey(2))
+    params = init_mlp_params(jax.random.PRNGKey(0))
+    plan = eng.round_plan(0)
+    full = eng._train_one(params, eng._x[0], eng._y[0], plan[0],
+                          n_steps=jnp.int32(2))
+    trunc = eng._train_one(params, eng._x[0], eng._y[0], plan[0, :2])
+    for a, b in zip(jax.tree_util.tree_leaves(full),
+                    jax.tree_util.tree_leaves(trunc)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 10_000))
+def test_cyclic_batch_plan_property(bk, seed):
+    """Property: with per-client batch size b_k, column j of the plan is
+    draw j mod b_k of the homogeneous plan — and b_k = B reproduces the
+    homogeneous plan bit for bit."""
+    key = jax.random.fold_in(jax.random.PRNGKey(11), seed)
+    n_samples = np.array([37, 52, 64])
+    base = np.asarray(counter_batch_plan(key, n_samples, 3, 8))
+    bks = np.array([bk, 8, max(1, bk // 2)])
+    het = np.asarray(counter_batch_plan(key, n_samples, 3, 8,
+                                        batch_sizes=bks))
+    cols = np.arange(8)
+    for k in range(3):
+        np.testing.assert_array_equal(het[k], base[k][:, cols % bks[k]])
+    np.testing.assert_array_equal(het[1], base[1])
+
+
+def test_scenario_hyperparams_draws_from_choices():
+    key = jax.random.PRNGKey(5)
+    sc = ScenarioConfig(het_steps=(1, 3, 5), het_batch=(8, 16))
+    steps_k, batch_k = scenario_hyperparams(key, 64, sc)
+    assert set(np.asarray(steps_k)) <= {1, 3, 5}
+    assert set(np.asarray(batch_k)) <= {8, 16}
+    none_s, none_b = scenario_hyperparams(key, 64, ScenarioConfig())
+    assert none_s is None and none_b is None
+
+
+def test_het_end_to_end_fused(world):
+    """Full fused run under hyperparameter heterogeneity: converging,
+    finite, and actually different from the homogeneous trajectory."""
+    het = _fused(world, scenario=ScenarioConfig(het_steps=(2, 5),
+                                                het_batch=(16, 32)))
+    hom = _fused(world)
+    het.advance(5)
+    hom.advance(5)
+    assert np.isfinite(het.global_vec).all()
+    assert not np.array_equal(het.global_vec, hom.global_vec)

@@ -112,6 +112,38 @@ def test_zero_uploader_sharded_round_holds_global(world, transmit):
     assert np.isfinite(srv.global_vec).all()
 
 
+@pytest.mark.parametrize("transmit", ["model", "delta"])
+def test_zero_uploader_cohort_round_holds_global(world, transmit):
+    """Active-cohort twin of the guard: a cohort whose slots never become
+    ready (straggler latencies), and then an all-phantom cohort (every
+    slot dead, m_eff = 0), both hold w_g bit-identically and report
+    varsigma = 0.0 — the all-masked superposition hits the exact same
+    normalizer clamp the dense path guards."""
+    import jax.numpy as jnp
+
+    from repro.fl import FusedPAOTA
+    x, y, parts = world
+    clients = [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+               for d in build_federation(x, y, parts)]
+    srv = FusedPAOTA(init_mlp_params(jax.random.PRNGKey(0)), clients,
+                     ChannelConfig(),
+                     SchedulerConfig(seed=1, **STRAGGLER_SCHED),
+                     PAOTAConfig(transmit=transmit), cohort_size=3)
+    g0 = srv.global_vec.copy()
+    rows = srv.advance(3)             # t in {1,2,3} << lat_lo: nobody ready
+    assert all(r["n_participants"] == 0 for r in rows)
+    assert all(r["varsigma"] == 0.0 for r in rows)
+    np.testing.assert_array_equal(srv.global_vec, g0)
+    # kill every slot: the m_eff = 0 step must also hold bit-identically
+    srv._carry = srv._carry._replace(
+        slot_live=jnp.zeros_like(srv._carry.slot_live))
+    rows = srv.advance(2)
+    assert all(r["n_participants"] == 0 for r in rows)
+    assert all(r["varsigma"] == 0.0 for r in rows)
+    np.testing.assert_array_equal(srv.global_vec, g0)
+    assert np.isfinite(srv.global_vec).all()
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 64), st.integers(0, 100_000))
 def test_capped_powers_satisfy_constraint_7(k, seed):
