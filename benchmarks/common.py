@@ -91,6 +91,18 @@ class BenchSetting:
                                  # every period, ONE cross-pod psum per N
                                  # periods; the trajectory advances in
                                  # whole windows)
+    cohort_size: int = 0         # fused/sharded: active-cohort mode — only
+                                 # m in-flight slots carry model-sized rows
+                                 # (0 = dense (K, ...) planes)
+    compress: str = ""           # fused/sharded + cohort: "topk"|"randmask"
+                                 # sparsifies the slot payloads to (m, s),
+                                 # s = round(d * compress_ratio); forces
+                                 # transmit="delta" (compression targets
+                                 # the small update, not the model)
+    compress_ratio: float = 1.0
+    error_feedback: bool = True  # compress only: per-client residual
+                                 # planes re-inject what sparsification
+                                 # dropped (off = plain sparsification)
 
     @classmethod
     def from_env(cls, **kw):
@@ -137,8 +149,19 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
             kw = {}
             if s.engine == "sharded" and s.group_period:
                 kw["group_period"] = s.group_period
+            if s.cohort_size:
+                kw["cohort_size"] = s.cohort_size
+            transmit = "model"
+            if s.compress:
+                # compressed slots ride the delta transmit mode (the
+                # drivers refuse otherwise)
+                transmit = "delta"
+                kw.update(compress=s.compress,
+                          compress_ratio=s.compress_ratio,
+                          error_feedback=s.error_feedback)
             srv = cls(params, clients, chan, sched,
-                      PAOTAConfig(solver=s.solver, seed=s.seed),
+                      PAOTAConfig(solver=s.solver, seed=s.seed,
+                                  transmit=transmit),
                       params_mode=s.params_mode,
                       pending_dtype=s.pending_dtype, **kw)
         else:

@@ -47,6 +47,24 @@ def main():
                          "period, ONE cross-pod model-sized psum per N "
                          "periods (0 = flat; the trajectory advances in "
                          "whole windows)")
+    ap.add_argument("--cohort-size", type=int, default=0,
+                    help="fused/sharded: active-cohort mode with m slots — "
+                         "model-sized rows exist only for the in-flight "
+                         "cohort (0 = dense (K, ...) planes)")
+    ap.add_argument("--compress", default="",
+                    choices=["", "topk", "randmask"],
+                    help="fused/sharded + --cohort-size: sparsify the slot "
+                         "payloads to s = round(d * ratio) coordinates "
+                         "(per-slot top-k | shared per-round random mask); "
+                         "switches transmit to 'delta' and keeps per-client "
+                         "error-feedback residuals so dropped coordinates "
+                         "re-enter later rounds")
+    ap.add_argument("--compress-ratio", type=float, default=1.0 / 16.0,
+                    help="s/d for --compress (default 1/16)")
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="drop the error-feedback residual planes (plain "
+                         "sparsification; frees the per-client (K, s) "
+                         "parked rows)")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
@@ -55,7 +73,11 @@ def main():
                               engine=args.engine,
                               params_mode=args.params_mode,
                               pending_dtype=args.pending_dtype,
-                              group_period=args.group_period)
+                              group_period=args.group_period,
+                              cohort_size=args.cohort_size,
+                              compress=args.compress,
+                              compress_ratio=args.compress_ratio,
+                              error_feedback=not args.no_error_feedback)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

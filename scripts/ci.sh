@@ -65,8 +65,9 @@ print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
 
 # cohort-round smoke: synthetic-stream dense vs active-cohort pair at
-# K=1e3 (benchmarks/cohort_round_bench; the carry-bytes shrink and the
-# rounds/sec win are the tracked series). Gated by the >2x diff below.
+# K=1e3, plus the compressed-payload rows (randmask s/d=1/16 with error
+# feedback, and int8 slot storage) — the carry-bytes shrink and the
+# rounds/sec win are the tracked series. Gated by the >2x diff below.
 rm -f "$BENCH_OUT/BENCH_cohort_round_smoke.json"
 python -m benchmarks.cohort_round_bench smoke
 python - "$BENCH_OUT" <<'EOF'
@@ -75,6 +76,9 @@ art = json.load(open(f"{sys.argv[1]}/BENCH_cohort_round_smoke.json"))
 names = [r["name"] for r in art["rows"]]
 assert any("synth_dense_k1000" in n for n in names), names
 assert any("synth_cohort_" in n for n in names), names
+# compressed-payload rows (randmask s/d=1/16; f32+EF and int8 variants)
+assert any("_rm16" in n for n in names), names
+assert any("_rm16_int8" in n for n in names), names
 assert all("carry_bytes=" in r["derived"] for r in art["rows"]), art["rows"]
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF

@@ -144,6 +144,35 @@ def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
     return jax.tree_util.tree_unflatten(treedef, agg), varsigma
 
 
+def paota_aggregate_compressed(values, idx, powers: jnp.ndarray,
+                               mask: jnp.ndarray, key, sigma_n: float,
+                               d: int, scale=None, axis_name=None):
+    """Eq. (8) over the (m, s) COMPRESSED cohort plane: each slot's stored
+    values on its own support superpose directly into d-space (the
+    gather-superpose-decompress kernel — decompression IS the
+    superposition, no dense (m, d) plane), with the same flat f32 AWGN
+    realization the dense path draws (single-leaf ``stacked_tree_noise``
+    == ``sigma_n * normal(key, (d,))``) and the same varsigma clamp.
+    ``scale`` folds int8 slot dequantization into the contraction;
+    varsigma sums the RAW b*p. Raveled single-leaf only — the compressed
+    plane has no pytree form.
+
+    Returns ((d,) f32 aggregate, clamped varsigma); with ``axis_name``
+    the slot axis crosses shards as ONE flat psum."""
+    bp = powers * mask
+    noiseless = isinstance(sigma_n, (int, float)) and sigma_n == 0.0
+    noise = (jnp.zeros((d,), jnp.float32) if noiseless
+             else sigma_n * jax.random.normal(key, (d,), jnp.float32))
+    if axis_name is not None:
+        from repro.kernels.aircomp_sum import gather_superpose_psum
+        return gather_superpose_psum(values, idx, bp, noise, axis_name, d,
+                                     scale=scale, varsigma_min=VARSIGMA_MIN)
+    from repro.kernels.ops import gather_superpose
+    agg, raw = gather_superpose(values, idx, bp, noise, d=d, scale=scale,
+                                vs_min=VARSIGMA_MIN)
+    return agg, jnp.maximum(raw, VARSIGMA_MIN)
+
+
 def paota_partial_stacked(stacked_models, powers: jnp.ndarray,
                           mask: jnp.ndarray, axis_name=None) -> jnp.ndarray:
     """Grouped-aggregation half of eq. (8): the superposition PARTIAL of

@@ -1,0 +1,88 @@
+"""Analog-payload compression primitives for the cohort plane.
+
+The cohort refactor (PR 7) left the payload plane at (m, d) in-flight
+rows; these helpers shrink each row to an (m, s) compressed plane with
+s << d before it enters the carry, per the sparsification + error
+feedback family the AirComp FEEL overview surveys (arxiv 2208.05643):
+
+* support selection — per-row magnitude top-k (``topk_support``) or a
+  shared per-round random mask (``randmask_indices``, counter-RNG so
+  every shard re-derives the identical support);
+* error feedback — the exact f32 complement of a row against its
+  transmitted reconstruction (``ef_residual``: residual + scattered
+  transmit == original, bit-for-bit), re-sparsified to width s for the
+  carry (``sparsify``);
+* int8 slot storage — per-row absmax scaling with an unbiased
+  stochastic-rounding dither (``quantize_int8_stochastic``), accumulated
+  in f32 downstream.
+
+Everything here is a pure jnp shape-polymorphic helper; the kernels that
+consume the compressed plane live in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def _row_ids(m: int):
+    return jnp.arange(m, dtype=jnp.int32)[:, None]
+
+
+def topk_support(a, s: int):
+    """(m, s) int32 indices of the s largest-|.| entries per row."""
+    _, idx = jax.lax.top_k(jnp.abs(a), s)
+    return idx.astype(jnp.int32)
+
+
+def randmask_indices(key, d: int, s: int):
+    """(s,) int32 shared support: s distinct coordinates of [0, d)."""
+    return jax.random.permutation(key, d)[:s].astype(jnp.int32)
+
+
+def gather_rows(a, idx):
+    """(m, s) values of ``a`` at the per-row support ``idx``."""
+    return jnp.take_along_axis(a, idx, axis=1)
+
+
+def scatter_rows(vals, idx, d: int):
+    """Decompress: scatter (m, s) values back to (m, d) rows (zeros off
+    the support; duplicate indices sum, though supports never hold any)."""
+    m = vals.shape[0]
+    return jnp.zeros((m, d), vals.dtype).at[_row_ids(m), idx].add(vals)
+
+
+def ef_residual(comp, idx, v_hat):
+    """Exact error-feedback residual: ``comp - scatter_rows(v_hat, idx)``
+    computed in place, so ``residual + scatter_rows(v_hat, idx) == comp``
+    holds bit-for-bit in f32 (on-support entries cancel to exactly 0.0
+    when ``v_hat`` is the untouched gather; off-support entries pass
+    through unchanged)."""
+    return comp.at[_row_ids(comp.shape[0]), idx].add(-v_hat)
+
+
+def sparsify(e, s: int):
+    """Re-sparsify a dense (m, d) residual to carry width: top-s by |.|.
+    Returns ((m, s) values, (m, s) int32 indices)."""
+    idx = topk_support(e, s)
+    return gather_rows(e, idx), idx
+
+
+def quantize_int8_stochastic(v, key):
+    """Per-row absmax int8 with an unbiased stochastic-rounding dither:
+    ``q = floor(v / scale + u)``, u ~ U[0, 1), so E[q * scale] = v
+    entrywise (the dither is drawn from the round's counter key — same
+    key, same draw). Returns ((m, s) int8, (m,) f32 scale)."""
+    v32 = v.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(v32), axis=1)
+    scale = jnp.maximum(amax / INT8_MAX, jnp.float32(1e-30))
+    u = jax.random.uniform(key, v32.shape, jnp.float32)
+    q = jnp.clip(jnp.floor(v32 / scale[:, None] + u), -INT8_MAX, INT8_MAX)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q, scale):
+    """f32 reconstruction of ``quantize_int8_stochastic`` output."""
+    return q.astype(jnp.float32) * scale[:, None]

@@ -54,6 +54,11 @@ TAG_LATENCY, TAG_CHANNEL, TAG_NOISE, TAG_BATCH = 0, 1, 2, 3
 # (cycle phases, responsiveness offsets, heterogeneous hyperparameters —
 # always drawn at round 0)
 TAG_AVAIL, TAG_DROPOUT, TAG_SCHED, TAG_TRAIT = 4, 5, 6, 7
+# compressed cohort payloads: the shared random-mask support drawn per
+# round (replicated across shards — every shard re-derives the same mask
+# from the counter stream) and the stochastic-rounding dither for int8
+# slot storage (folded with the shard offset so shard-local draws differ)
+TAG_COMPRESS, TAG_QUANT = 8, 9
 
 
 def round_tag_key(base_key, round_idx, tag: int):

@@ -33,10 +33,12 @@ import numpy as np
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
 from repro.core.aggregation import ravel
 from repro.core.power_control import p2_constants
-from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, TAG_SCHED,
-                                  SchedulerConfig, counter_latencies,
-                                  round_tag_key, scenario_hyperparams,
-                                  scenario_latencies, scenario_masks)
+from repro.core.compress import randmask_indices
+from repro.core.scheduler import (TAG_CHANNEL, TAG_COMPRESS, TAG_NOISE,
+                                  TAG_QUANT, TAG_SCHED, SchedulerConfig,
+                                  counter_latencies, round_tag_key,
+                                  scenario_hyperparams, scenario_latencies,
+                                  scenario_masks)
 from repro.fl.engine import BatchedEngine, make_engine
 from repro.fl.runtime import (RoundCarry, RoundCfg, RoundStreams,
                               init_cohort_carry, init_round_carry,
@@ -89,13 +91,28 @@ class FusedPAOTA:
     inside the scan from the scheduler's counter-RNG streams; the default
     ``ScenarioConfig()`` is the identity scenario (bit-identical to
     ``scenario=None``).
+
+    ``compress="topk"|"randmask"`` (requires ``cohort_size`` +
+    ``transmit='delta'`` + raveled params) shrinks each slot row to the
+    s = round(d * ``compress_ratio``) compressed plane: per-slot supports,
+    error-feedback residuals handed off through a (K, s) parked plane on
+    slot turnover (``error_feedback=False`` drops both residual planes),
+    and ``slot_dtype`` storage for the values ("int8" = per-row absmax +
+    unbiased stochastic rounding; default = ``pending_dtype``). AirComp
+    decompresses inside the gather-superpose kernel — the dense (m, d)
+    plane never enters the carry. ``compress=None`` (default) and the
+    s = d identity compression are bit-identical to the uncompressed
+    cohort program.
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
                  sched_cfg: SchedulerConfig, cfg: PAOTAConfig, *,
                  params_mode: str = "raveled",
                  pending_dtype: str = "float32", donate: bool = True,
-                 cohort_size: int | None = None, scenario=None):
+                 cohort_size: int | None = None, scenario=None,
+                 compress: str | None = None, compress_ratio: float = 1.0,
+                 slot_dtype: str | None = None,
+                 error_feedback: bool = True):
         if params_mode not in ("raveled", "pytree"):
             raise ValueError(f"params_mode={params_mode!r} (expected "
                              "'raveled' or 'pytree')")
@@ -133,6 +150,39 @@ class FusedPAOTA:
         if self.cohort_size and not 1 <= self.cohort_size <= self.k:
             raise ValueError(f"cohort_size={self.cohort_size} must lie in "
                              f"[1, K={self.k}]")
+        self.compress = compress or ""
+        if self.compress not in ("", "topk", "randmask"):
+            raise ValueError(f"compress={compress!r} (expected None, 'topk' "
+                             "or 'randmask')")
+        sd = slot_dtype or ""
+        if sd not in ("", "float32", "bfloat16", "int8"):
+            raise ValueError(f"slot_dtype={slot_dtype!r} (expected None, "
+                             "'float32', 'bfloat16' or 'int8')")
+        if sd and not self.compress:
+            raise ValueError("slot_dtype is compressed-slot storage; pass "
+                             "compress='topk' or 'randmask' (the dense "
+                             "carry's storage knob is pending_dtype)")
+        self.compress_s = 0
+        if self.compress:
+            if not self.cohort_size:
+                raise ValueError("compress needs active-cohort mode: pass "
+                                 "cohort_size=m — the compressed (m, s) "
+                                 "plane IS the cohort slot payload")
+            if cfg.transmit != "delta":
+                raise ValueError("compress rides transmit='delta': "
+                                 "sparsifying full model vectors w_k makes "
+                                 "no sense — compression targets the small "
+                                 "local-update deltas")
+            if params_mode != "raveled":
+                raise NotImplementedError(
+                    "compress + params_mode='pytree' is not wired yet (the "
+                    "compressed plane needs per-leaf supports); use "
+                    "params_mode='raveled'")
+            if not 0.0 < compress_ratio <= 1.0:
+                raise ValueError(f"compress_ratio={compress_ratio} (expected "
+                                 "0 < ratio <= 1, the kept fraction s/d)")
+            self.compress_s = min(self.d,
+                                  max(1, int(round(self.d * compress_ratio))))
         c1, c0 = p2_constants(cfg.smooth_l, cfg.eps_bound, self.k, self.d,
                               chan.sigma_n2)
         # chan.sigma_n is a concrete float (jnp.sqrt is not callable through
@@ -143,7 +193,13 @@ class FusedPAOTA:
                               delta_t=sched_cfg.delta_t,
                               transmit_delta=cfg.transmit == "delta",
                               pending_dtype=pending_dtype,
-                              cohort_size=self.cohort_size)
+                              cohort_size=self.cohort_size,
+                              compress=self.compress,
+                              compress_s=self.compress_s,
+                              slot_dtype=((sd or pending_dtype)
+                                          if self.compress else ""),
+                              error_feedback=bool(error_feedback
+                                                  and self.compress))
         self._lat_key = jax.random.PRNGKey(sched_cfg.seed)
         self._srv_key = jax.random.PRNGKey(cfg.seed)
         engine.enable_counter_plan(self._srv_key)
@@ -224,6 +280,13 @@ class FusedPAOTA:
             cohort_train = self._cohort_train
             sched_priority = lambda r: jax.random.uniform(
                 round_tag_key(self._lat_key, r, TAG_SCHED), (self.k,))
+        compress_mask = quant_key = None
+        if self.compress == "randmask" and self.compress_s < self.d:
+            compress_mask = lambda r: randmask_indices(
+                round_tag_key(self._srv_key, r, TAG_COMPRESS), self.d,
+                self.compress_s)
+        if self._rcfg.slot_dtype == "int8":
+            quant_key = lambda r: round_tag_key(self._srv_key, r, TAG_QUANT)
         return RoundStreams(
             local_train=self._local_train_all,
             latencies=lat,
@@ -234,6 +297,8 @@ class FusedPAOTA:
             scenario=scen,
             cohort_train=cohort_train,
             sched_priority=sched_priority,
+            compress_mask=compress_mask,
+            quant_key=quant_key,
         )
 
     def _init_carry(self, vec, x, y) -> RoundCarry:
@@ -244,7 +309,8 @@ class FusedPAOTA:
                 vec, x, y, streams=self._streams(), k=self.k,
                 m=self.cohort_size,
                 pending_dtype=self._rcfg.pending_dtype,
-                keep_pending=not self._rcfg.transmit_delta)
+                keep_pending=not self._rcfg.transmit_delta,
+                rcfg=self._rcfg)
         return init_round_carry(vec, x, y, streams=self._streams(),
                                 pending_dtype=self._rcfg.pending_dtype,
                                 keep_pending=not self._rcfg.transmit_delta)

@@ -84,11 +84,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregation import (guarded_global_update,
+                                    paota_aggregate_compressed,
                                     paota_aggregate_stacked,
                                     paota_finalize_stacked,
                                     paota_partial_stacked)
 from repro.core.aircomp import VARSIGMA_MIN, effective_power_cap
 from repro.core.boxqp import waterfill_beta_jnp
+from repro.core.compress import (dequantize_int8, ef_residual, gather_rows,
+                                 quantize_int8_stochastic, scatter_rows,
+                                 sparsify, topk_support)
 from repro.core.power_control import (client_sq_norms, power_from_beta,
                                       similarity_factor, staleness_factor)
 from repro.core.scheduler import sched_advance, sched_broadcast
@@ -154,6 +158,25 @@ class RoundCarry(NamedTuple):
                               # in-flight client (False = phantom row:
                               # b_k = 0 through every reduction, exactly the
                               # sharded drivers' phantom-client masking)
+    slot_idx: jnp.ndarray = None     # compressed cohort payloads only
+                              # (RoundCfg.compress): (m, s) i32 — each
+                              # slot's support, the d-space coordinates its
+                              # `deltas` values live on (top-k is per-row;
+                              # randmask rows trained in different rounds
+                              # hold different shared masks, so the support
+                              # is per-slot either way). None when off.
+    slot_scale: jnp.ndarray = None   # (m,) f32 — int8 slot storage only:
+                              # per-row absmax dequantization factors
+    slot_resid: jnp.ndarray = None   # (m, s) f32 — error-feedback residual
+                              # of each in-flight slot (what the row's
+                              # compression dropped), on its own support:
+    slot_resid_idx: jnp.ndarray = None  # (m, s) i32. Residuals always f32.
+    resid_val: jnp.ndarray = None    # (K, s) f32 — parked EF residuals:
+                              # on slot turnover a departing slot scatters
+                              # its residual back to the owning client's
+                              # row; a re-scheduled client resumes its own
+                              # accumulated error. Sharded: (K_local, s).
+    resid_idx: jnp.ndarray = None    # (K, s) i32 — parked supports
 
 
 class RoundCfg(NamedTuple):
@@ -178,6 +201,21 @@ class RoundCfg(NamedTuple):
                               # historical round); m >= 1 = at most m clients
                               # in flight, payload planes are (m, ...) slot
                               # rows (gather on schedule, scatter on upload)
+    compress: str = ""        # compressed cohort payloads: "" = off (the
+                              # PR 7 program, bit for bit); "topk" /
+                              # "randmask" = slots carry an (m, s) plane on
+                              # per-slot supports. Requires cohort_size,
+                              # transmit_delta, raveled params.
+    compress_s: int = 0       # static compressed width s; s == d routes
+                              # the dense stats/AirComp stages statically
+                              # (identity compression, bit-identical)
+    slot_dtype: str = ""      # compressed slot-value storage: "" resolves
+                              # to pending_dtype; "float32" | "bfloat16" |
+                              # "int8" (per-row absmax + stochastic
+                              # rounding, f32 accumulation downstream)
+    error_feedback: bool = False  # carry per-slot EF residuals + the (K, s)
+                              # parked plane; compensation a = delta +
+                              # parked residual is what gets compressed
 
 
 class GroupTopology(NamedTuple):
@@ -217,6 +255,16 @@ class RoundStreams(NamedTuple):
                               # available clients fill freed slots. Rows
                               # pinned to -inf are never schedulable (the
                               # sharded drivers' phantom fill).
+    compress_mask: Callable = None   # compress='randmask': (round) ->
+                              # (s,) i32 shared support — drawn from the
+                              # counter stream (TAG_COMPRESS), REPLICATED
+                              # across shards so every shard re-derives
+                              # the identical per-round mask
+    quant_key: Callable = None       # slot_dtype='int8': (round) -> PRNG
+                              # key for the stochastic-rounding dither
+                              # (TAG_QUANT; sharded drivers fold in the
+                              # shard offset — per-row draws must differ
+                              # across shards, unlike the mask)
 
 
 # ---------------------------------------------------------------------------
@@ -276,12 +324,87 @@ def constraint7_powers(powers, payload, h, p_max, w_norm2=None):
     return jnp.minimum(powers, effective_power_cap(w_norm2, h, p_max))
 
 
+def compressed_round_factors(values, idx, resid, resid_idx, global_vec,
+                             prev_global, stal, omega, scale=None,
+                             eps=1e-12):
+    """Stage-2 twin of ``round_factors`` for the compressed cohort plane:
+    the stats sweep runs over the (m, s) transmitted values + the EF
+    residuals on their supports (``repro.kernels.ops.round_stats_
+    compressed``) — never a dense (m, d) row. theta sees each slot's full
+    reconstruction <v + e, gdir> (exact at s = d, the sparsity
+    approximation below it); the returned payload norm is ||v||^2, the
+    TRANSMITTED energy, which is what the power constraint (7) actually
+    caps on the air. Raveled single-leaf only.
+
+    Returns (rho, theta, w_norm2)."""
+    from repro.kernels.ops import round_stats_compressed
+    gdir = global_vec - prev_global
+    dots, dn2, pn2, gn2 = round_stats_compressed(values, idx, resid,
+                                                 resid_idx, gdir,
+                                                 scale=scale)
+    gnorm = jnp.sqrt(gn2)
+    den = jnp.sqrt(jnp.maximum(dn2, eps) * jnp.maximum(gn2, eps))
+    cos = jnp.where(gnorm < 1e-12, 0.0, dots / den)
+    theta = similarity_factor(cos)
+    rho = staleness_factor(stal, omega)
+    return rho, theta, pn2
+
+
 def _storage_dtype(rcfg: RoundCfg):
     return jnp.dtype(rcfg.pending_dtype)
 
 
 def _cast_rows(tree, dtype):
     return jax.tree_util.tree_map(lambda l: l.astype(dtype), tree)
+
+
+def _slot_dtype(rcfg: RoundCfg) -> str:
+    """Resolved compressed slot-value storage dtype."""
+    return rcfg.slot_dtype or rcfg.pending_dtype
+
+
+def _compress_plane(comp, *, rcfg: RoundCfg, streams: RoundStreams, t):
+    """Compress freshly trained (m, d) f32 rows (EF-compensated deltas)
+    into the carry's slot planes.
+
+    Support: s == d is statically the identity (both schemes — the carry
+    holds the dense rows on an arange support, so the stats/AirComp
+    stages route dense and stay bit-identical); top-k picks each row's s
+    largest-|.| coordinates; randmask broadcasts the round's shared
+    counter-RNG mask. Storage: f32 (exact), bf16 (round-trip), or int8
+    (per-row absmax + unbiased stochastic rounding, scale kept f32). The
+    EF residual is the exact f32 complement of the row against its stored
+    reconstruction, re-sparsified to width s for the carry.
+
+    Returns (stored (m, s), idx (m, s) i32, scale (m,) f32 | None,
+    resid (m, s) f32 | None, resid_idx (m, s) i32 | None)."""
+    m, d = comp.shape
+    s = rcfg.compress_s
+    if s >= d:
+        idx = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32)[None], (m, d))
+        vals = comp
+    elif rcfg.compress == "topk":
+        idx = topk_support(comp, s)
+        vals = gather_rows(comp, idx)
+    else:                                                   # randmask
+        mask = streams.compress_mask(t)
+        idx = jnp.broadcast_to(mask[None], (m, s))
+        vals = gather_rows(comp, idx)
+    sd = _slot_dtype(rcfg)
+    scale = None
+    if sd == "int8":
+        stored, scale = quantize_int8_stochastic(vals, streams.quant_key(t))
+        v_hat = dequantize_int8(stored, scale)
+    elif sd == "bfloat16":
+        stored = vals.astype(jnp.bfloat16)
+        v_hat = stored.astype(jnp.float32)
+    else:
+        stored = v_hat = vals
+    if not rcfg.error_feedback:
+        return stored, idx, scale, None, None
+    e = ef_residual(comp, idx, v_hat)
+    e_val, e_idx = sparsify(e, s)
+    return stored, idx, scale, e_val, e_idx
 
 
 # ---------------------------------------------------------------------------
@@ -546,11 +669,33 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     stal = jnp.where(live, stal_k[occ], 0).astype(jnp.float32)
 
     # 2-4. identical per-row stages over the m cohort rows (sweep 1: fused
-    # stats; P2 water-filling; constraint (7) under the gathered channel)
+    # stats; P2 water-filling; constraint (7) under the gathered channel).
+    # Compressed payloads (rcfg.compress, a trace-time branch — off emits
+    # the PR 7 program op for op): the stats sweep runs on the (m, s)
+    # compressed rows + EF residuals; at the static s == d identity the
+    # dense formulations route unchanged (bit-identity with compress off).
     payload = carry.deltas if rcfg.transmit_delta else carry.pending
-    rho, theta, w_norm2 = round_factors(
-        carry.deltas, None if rcfg.transmit_delta else carry.pending,
-        carry.global_vec, carry.prev_global, stal, rcfg.omega)
+    if rcfg.compress:
+        d_model = carry.global_vec.shape[0]
+        identity = rcfg.compress_s >= d_model
+        # identity support + int8: the dense stages need the dequantized
+        # rows (f32/bf16 identity rows pass through untouched — the
+        # bit-identity claim is about THOSE)
+        v_id = (carry.deltas if carry.slot_scale is None
+                else dequantize_int8(carry.deltas, carry.slot_scale))
+        if identity:
+            rho, theta, w_norm2 = round_factors(
+                v_id, None, carry.global_vec, carry.prev_global,
+                stal, rcfg.omega)
+        else:
+            rho, theta, w_norm2 = compressed_round_factors(
+                carry.deltas, carry.slot_idx, carry.slot_resid,
+                carry.slot_resid_idx, carry.global_vec, carry.prev_global,
+                stal, rcfg.omega, scale=carry.slot_scale)
+    else:
+        rho, theta, w_norm2 = round_factors(
+            carry.deltas, None if rcfg.transmit_delta else carry.pending,
+            carry.global_vec, carry.prev_global, stal, rcfg.omega)
     p_max = jnp.full((m,), rcfg.p_max_watts, jnp.float32)
     beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b, rcfg.c1, rcfg.c0,
                                       axis_name=axis_name)
@@ -561,10 +706,19 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
 
     # 5+6. AirComp over the cohort rows (sweep 2) + the guarded update —
     # an all-masked cohort degenerates to the zero-uploader hold exactly
-    # like the dense path (varsigma below the guard threshold)
-    agg, varsigma = paota_aggregate_stacked(
-        payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
-        axis_name=axis_name)
+    # like the dense path (varsigma below the guard threshold). Compressed:
+    # the gather-superpose kernel decompresses INTO the superposition
+    # (eq. 8 in d-space) before the global update — the stored int8 plane
+    # feeds it directly with its scale folded into the weights.
+    if rcfg.compress and not identity:
+        agg, varsigma = paota_aggregate_compressed(
+            carry.deltas, carry.slot_idx, powers, b,
+            streams.noise_key(carry.t), rcfg.sigma_n, d_model,
+            scale=carry.slot_scale, axis_name=axis_name)
+    else:
+        agg, varsigma = paota_aggregate_stacked(
+            v_id if rcfg.compress else payload, powers, b,
+            streams.noise_key(carry.t), rcfg.sigma_n, axis_name=axis_name)
     new_global, new_prev = guarded_global_update(
         carry.global_vec, carry.prev_global, agg, varsigma,
         delta=rcfg.transmit_delta)
@@ -603,6 +757,25 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     n_ready, n_lat, n_model = sched_broadcast(
         ready, busy, carry.model_round, sched_k, lat_full, t_next)
 
+    # EF residual hand-off on slot turnover (trace-time branch): FIRST
+    # every departing slot parks its residual on the owning client's
+    # (K, s) row (the scatter half of the tentpole's "(K, s) residual
+    # row"), THEN the newly scheduled occupants pick their parked rows
+    # back up (a same-round depart -> reschedule resumes the residual it
+    # just parked), THEN the consumed rows zero — the parked plane only
+    # ever holds errors nobody is currently training against.
+    resid_val = resid_idx = pr_val = pr_idx = None
+    if rcfg.compress and rcfg.error_feedback:
+        park_row = jnp.where(depart, occ, k_local)      # OOB = no write
+        resid_val = carry.resid_val.at[park_row].set(carry.slot_resid,
+                                                     mode="drop")
+        resid_idx = carry.resid_idx.at[park_row].set(carry.slot_resid_idx,
+                                                     mode="drop")
+        pr_val = jnp.where(take[:, None], resid_val[new_occ], 0.0)
+        pr_idx = resid_idx[new_occ]
+        consumed = jnp.where(take, new_occ, k_local)
+        resid_val = resid_val.at[consumed].set(0.0, mode="drop")
+
     # 7c. cohort training: ONLY the m slot rows materialize model-sized
     # work — the newly scheduled slots take their trained rows (f32 delta
     # before the storage cast, same rules as the dense path); retained
@@ -614,17 +787,41 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         msk = take.reshape((m,) + (1,) * (new.ndim - 1))
         return jnp.where(msk, new, old)
 
-    pending = None if carry.pending is None else jax.tree_util.tree_map(
-        lambda tr, p: row_select(tr.astype(p.dtype), p),
-        trained, carry.pending)
-    if dtype == jnp.float32 and pending is not None:
-        deltas = jax.tree_util.tree_map(
-            lambda p, dl, g: row_select(p - g[None], dl),
-            pending, carry.deltas, new_global)
+    if rcfg.compress:
+        # compressed store: the f32 delta rows are EF-compensated with the
+        # resumed parked residuals (decompressed transiently — the carry
+        # never holds an (m, d) plane), then support-selected, stored, and
+        # their exact f32 residual re-sparsified. Non-take rows keep every
+        # old slot plane (garbage residual gathers for them are discarded
+        # here). Raveled single-leaf: `trained` is a bare (m, d) array.
+        comp = trained - new_global[None]
+        if pr_val is not None:
+            comp = comp + scatter_rows(pr_val, pr_idx, d_model)
+        stored, idx_new, scale_new, e_val, e_idx = _compress_plane(
+            comp, rcfg=rcfg, streams=streams, t=t_next)
+        pending = None
+        deltas = row_select(stored, carry.deltas)
+        slot_idx = row_select(idx_new, carry.slot_idx)
+        slot_scale = (None if scale_new is None
+                      else jnp.where(take, scale_new, carry.slot_scale))
+        slot_resid = (None if e_val is None
+                      else row_select(e_val, carry.slot_resid))
+        slot_resid_idx = (None if e_idx is None
+                          else row_select(e_idx, carry.slot_resid_idx))
     else:
-        deltas = jax.tree_util.tree_map(
-            lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype), dl),
-            trained, carry.deltas, new_global)
+        pending = None if carry.pending is None else jax.tree_util.tree_map(
+            lambda tr, p: row_select(tr.astype(p.dtype), p),
+            trained, carry.pending)
+        if dtype == jnp.float32 and pending is not None:
+            deltas = jax.tree_util.tree_map(
+                lambda p, dl, g: row_select(p - g[None], dl),
+                pending, carry.deltas, new_global)
+        else:
+            deltas = jax.tree_util.tree_map(
+                lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype),
+                                             dl),
+                trained, carry.deltas, new_global)
+        slot_idx = slot_scale = slot_resid = slot_resid_idx = None
 
     n_upl = ksum(b)
     denom = jnp.maximum(n_upl, 1.0)
@@ -640,7 +837,11 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
                        busy_lat=n_lat, model_round=n_model,
                        global_vec=new_global, prev_global=new_prev,
                        pending=pending, deltas=deltas, held=None,
-                       slot_client=new_occ, slot_live=new_live)
+                       slot_client=new_occ, slot_live=new_live,
+                       slot_idx=slot_idx, slot_scale=slot_scale,
+                       slot_resid=slot_resid,
+                       slot_resid_idx=slot_resid_idx,
+                       resid_val=resid_val, resid_idx=resid_idx)
     return carry, out
 
 
@@ -673,7 +874,8 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams,
 
 def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
                       n_real=None, pending_dtype: str = "float32",
-                      keep_pending: bool = True) -> RoundCarry:
+                      keep_pending: bool = True,
+                      rcfg: RoundCfg | None = None) -> RoundCarry:
     """Round-0 kick-off of the active-cohort carry: the first
     ``min(m, n_real)`` clients (in id order) fill the slots and receive
     the broadcast; everyone else idles at ``busy_lat = +inf`` until a slot
@@ -682,7 +884,12 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
     padding — phantom rows must never occupy a live slot. At m = K with
     no phantoms this is exactly ``init_round_carry`` plus the identity
     slot map, which is what makes cohort_size=K allclose to the dense
-    path from round 0."""
+    path from round 0.
+
+    ``rcfg`` (only its compression knobs are read) switches the payload
+    plane to the compressed (m, s) form: the round-0 deltas run through
+    the same ``_compress_plane`` stage the scan uses, with empty (K, s)
+    parked-residual planes when error feedback is on."""
     if m > k:
         raise ValueError(f"cohort_size={m} exceeds the client-plane extent "
                          f"{k}")
@@ -696,6 +903,33 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
                      jnp.asarray(jnp.inf, lat_full.dtype))
     trained = streams.cohort_train(vec, x, y, 0, occ)
     dtype = jnp.dtype(pending_dtype)
+    compress = bool(rcfg is not None and rcfg.compress)
+    if compress:
+        # compressed payloads ride transmit='delta' (driver-enforced);
+        # raveled single-leaf, so `trained` is a bare (m, d) array
+        stored, idx, scale, e_val, e_idx = _compress_plane(
+            trained - vec[None], rcfg=rcfg, streams=streams, t=0)
+        s = stored.shape[1]
+        ef = rcfg.error_feedback
+        return RoundCarry(
+            t=jnp.int32(0),
+            time=jnp.float32(0.0),
+            ready=jnp.zeros((k,), bool),
+            busy_lat=busy,
+            model_round=jnp.zeros((k,), jnp.int32),
+            global_vec=vec,
+            prev_global=vec,
+            pending=None,
+            deltas=stored,
+            slot_client=occ,
+            slot_live=live,
+            slot_idx=idx,
+            slot_scale=scale,
+            slot_resid=e_val,
+            slot_resid_idx=e_idx,
+            resid_val=jnp.zeros((k, s), jnp.float32) if ef else None,
+            resid_idx=jnp.zeros((k, s), jnp.int32) if ef else None,
+        )
     return RoundCarry(
         t=jnp.int32(0),
         time=jnp.float32(0.0),

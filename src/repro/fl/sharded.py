@@ -59,7 +59,13 @@ POLICY difference (same distributions; at m = K both pin every client to
 a permanent slot and the paths coincide). Round-0 cohort init also runs
 inside ``shard_map``: its payload gathers use shard-local slot ids, which
 plain GSPMD jit would misread as global rows. Grouped aggregation does
-not compose with cohort mode yet.
+not compose with cohort mode yet. Compressed payloads (``compress=``)
+shard the (m, s) slot planes and (K, s) parked EF residuals over the
+same client axis; the randmask support is re-derived replicated on every
+shard from the counter stream (no collective), the int8 dither key folds
+in the shard offset, and the compressed superposition is still ONE psum
+(``gather_superpose_psum`` concatenates the accumulator with the
+varsigma partial).
 
 Equivalence contract: every shard consumes its rows of the SAME global
 counter-RNG draws the single-device scan makes — latency and channel
@@ -86,10 +92,11 @@ except ImportError:                     # 0.4.x: experimental namespace
     from jax.experimental.shard_map import shard_map
 
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
-from repro.core.scheduler import (TAG_CHANNEL, TAG_NOISE, TAG_SCHED,
-                                  SchedulerConfig, counter_latencies,
-                                  round_tag_key, scenario_latencies,
-                                  scenario_masks)
+from repro.core.compress import randmask_indices
+from repro.core.scheduler import (TAG_CHANNEL, TAG_COMPRESS, TAG_NOISE,
+                                  TAG_QUANT, TAG_SCHED, SchedulerConfig,
+                                  counter_latencies, round_tag_key,
+                                  scenario_latencies, scenario_masks)
 from repro.fl.fused import FusedPAOTA
 from repro.fl.runtime import (GroupTopology, RoundCarry, RoundStreams,
                               init_cohort_carry, scan_rounds, scan_windows)
@@ -132,7 +139,10 @@ class ShardedPAOTA(FusedPAOTA):
                  mesh=None, client_axes=None, params_mode: str = "raveled",
                  model_cfg=None, pending_dtype: str = "float32",
                  donate: bool = True, group_period: int = 0, pod_axes=None,
-                 cohort_size: int | None = None, scenario=None):
+                 cohort_size: int | None = None, scenario=None,
+                 compress: str | None = None, compress_ratio: float = 1.0,
+                 slot_dtype: str | None = None,
+                 error_feedback: bool = True):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -189,7 +199,10 @@ class ShardedPAOTA(FusedPAOTA):
         super().__init__(init_params, clients, chan, sched_cfg, cfg,
                          params_mode=params_mode, pending_dtype=pending_dtype,
                          donate=donate, cohort_size=cohort_size,
-                         scenario=scenario)
+                         scenario=scenario, compress=compress,
+                         compress_ratio=compress_ratio,
+                         slot_dtype=slot_dtype,
+                         error_feedback=error_feedback)
         if group_period:
             self._rcfg = self._rcfg._replace(group_period=group_period)
         # phantom-client padding: pad K to the next multiple of the
@@ -227,10 +240,15 @@ class ShardedPAOTA(FusedPAOTA):
         self.m_local = 0
         if self.cohort_size:
             if self.cohort_size % self.n_shards:
+                lo = (self.cohort_size // self.n_shards) * self.n_shards
+                hi = lo + self.n_shards
+                near = (f"{hi}" if lo == 0
+                        else f"{lo} and {hi}")
                 raise ValueError(
                     f"cohort_size={self.cohort_size} must be divisible by "
                     f"the {self.n_shards} client shards (slots are "
-                    f"shard-local)")
+                    f"shard-local); the nearest valid cohort sizes are "
+                    f"{near}")
             self.m_local = self.cohort_size // self.n_shards
             if self.m_local > self.k_local:
                 raise ValueError(
@@ -263,6 +281,11 @@ class ShardedPAOTA(FusedPAOTA):
         else:
             held_spec = None
         slot_spec = P(ax) if self.cohort_size else None
+        # compressed cohort planes: the (m, s) slot planes and the (K, s)
+        # parked-residual planes all shard their leading (client) axis,
+        # like the payload plane they replace
+        comp_spec = P(ax, None) if self._rcfg.compress else None
+        ef_spec = comp_spec if self._rcfg.error_feedback else None
         self._carry_specs = RoundCarry(
             t=P(), time=P(), ready=P(ax), busy_lat=P(ax),
             model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
@@ -271,7 +294,11 @@ class ShardedPAOTA(FusedPAOTA):
             # cohort mode: the payload planes' leading axis is the m slots
             # (m_local per shard) — same specs, smaller extent
             deltas=pend_spec, held=held_spec,
-            slot_client=slot_spec, slot_live=slot_spec)
+            slot_client=slot_spec, slot_live=slot_spec,
+            slot_idx=comp_spec,
+            slot_scale=(P(ax) if self._rcfg.slot_dtype == "int8" else None),
+            slot_resid=ef_spec, slot_resid_idx=ef_spec,
+            resid_val=ef_spec, resid_idx=ef_spec)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
@@ -329,6 +356,8 @@ class ShardedPAOTA(FusedPAOTA):
             scenario=scen,
             cohort_train=base.cohort_train,  # gathers by id: already padded
             sched_priority=prio,
+            compress_mask=base.compress_mask,   # slot planes are never
+            quant_key=base.quant_key,           # client-indexed: no padding
         )
 
     # ------------------------------------------------------------------
@@ -406,6 +435,18 @@ class ShardedPAOTA(FusedPAOTA):
             # difference vs the fused driver's global priority order
             prio = lambda r: pad_slice(jax.random.uniform(
                 round_tag_key(self._lat_key, r, TAG_SCHED), (k,)), -jnp.inf)
+        compress_mask = quant_key = None
+        if self.compress == "randmask" and self.compress_s < self.d:
+            # the SAME replicated mask the fused driver draws: every shard
+            # re-derives it from the counter stream, no collective needed
+            compress_mask = lambda r: randmask_indices(
+                round_tag_key(self._srv_key, r, TAG_COMPRESS), self.d,
+                self.compress_s)
+        if self._rcfg.slot_dtype == "int8":
+            # fold the shard offset into the dither key so shard-local
+            # draws are independent across shards (same shape, own stream)
+            quant_key = lambda r: jax.random.fold_in(
+                round_tag_key(self._srv_key, r, TAG_QUANT), offset)
 
         return RoundStreams(
             local_train=local_train,
@@ -416,6 +457,8 @@ class ShardedPAOTA(FusedPAOTA):
             scenario=scen_cb,
             cohort_train=cohort_train if self.cohort_size else None,
             sched_priority=prio,
+            compress_mask=compress_mask,
+            quant_key=quant_key,
         )
 
     # ------------------------------------------------------------------
@@ -441,7 +484,8 @@ class ShardedPAOTA(FusedPAOTA):
                     v, xs, ys, streams=self._shard_streams(offset),
                     k=self.k_local, m=self.m_local, n_real=n_real,
                     pending_dtype=self._rcfg.pending_dtype,
-                    keep_pending=not self._rcfg.transmit_delta)
+                    keep_pending=not self._rcfg.transmit_delta,
+                    rcfg=self._rcfg)
 
             smap = shard_map(body, self.mesh,
                              in_specs=(glob_spec, self._x_spec,

@@ -258,6 +258,148 @@ def aircomp_partial_tree(stacked_leaves, bp: jnp.ndarray, axis_name=None):
     return flat
 
 
+# ---------------------------------------------------------------------------
+# gather-superpose-decompress: AirComp over the (m, s) compressed cohort
+# plane without ever materializing the dense (m, d) payload
+# ---------------------------------------------------------------------------
+
+def _gather_superpose_kernel(vs_min, n_blocks, block_n, block_d,
+                             bp_ref, w_ref, val_ref, idx_ref, noise_ref,
+                             out_ref, vs_ref):
+    i = pl.program_id(0)                        # d stripe
+    j = pl.program_id(1)                        # flattened (m*s) block
+    raw = jnp.sum(bp_ref[...])                  # (1, m) raw b*p
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = noise_ref[...].astype(jnp.float32)
+
+    # per-element weighted payload: w already folds b*p (masked) and any
+    # int8 dequantization scale, repeated across each row's s entries —
+    # so dead slots and padding contribute exact zeros
+    a = w_ref[...] * val_ref[...].astype(jnp.float32)        # (BLOCK_N, 1)
+    cols = i * block_d + jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, block_d), 1)
+    onehot = (idx_ref[...] == cols).astype(jnp.float32)      # (BLOCK_N, BLOCK_D)
+    # scatter-as-matmul: contracting the flattened-element axis of the
+    # one-hot support drops each a_e into its column of the stripe (MXU
+    # shape, f32 accumulation) — the revisited out stripe accumulates
+    # across the j blocks
+    out_ref[...] += jax.lax.dot_general(
+        a, onehot, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (1, BLOCK_D)
+
+    @pl.when(j == n_blocks - 1)
+    def _normalize():
+        out_ref[...] = out_ref[...] / jnp.maximum(raw, vs_min)
+
+    @pl.when((i == 0) & (j == 0))
+    def _emit_vs():
+        vs_ref[...] = raw[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("d", "vs_min", "block_d",
+                                             "block_n", "interpret"))
+def gather_superpose_pallas(values: jnp.ndarray, idx: jnp.ndarray,
+                            bp: jnp.ndarray, noise: jnp.ndarray, *, d: int,
+                            scale: jnp.ndarray | None = None,
+                            vs_min: float = 1e-12,
+                            block_d: int = DEFAULT_BLOCK_D,
+                            block_n: int = 1024,
+                            interpret: bool | None = None):
+    """AirComp over compressed cohort rows, fused: slot gather + b*p
+    masking + compressed superposition + AWGN + varsigma in one pass.
+
+    values: (m, s) compressed payload rows (f32 / bf16 / int8);
+    idx: (m, s) int32 support (each row's coordinates in [0, d));
+    bp: (m,) masked transmit powers b_k p_k; noise: (d,) AWGN;
+    scale: optional (m,) int8 dequantization factors, folded into the
+    per-element weight so the stored int8 plane feeds the MXU directly
+    with f32 accumulation — varsigma stays the RAW sum of b*p.
+
+    Grid: (d stripes) x (flattened m*s element blocks); each (BLOCK_N, 1)
+    element column scatters into its stripe through a one-hot
+    (BLOCK_N, BLOCK_D) contraction, initialized with the noise stripe and
+    normalized on the last block — the dense (m, d) plane never exists.
+    Returns ((d,) f32 aggregate, raw varsigma).
+
+    ``interpret=None`` resolves from the backend (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = backend_interpret_default()
+    m, s = values.shape
+    n = m * s
+    bp32 = bp.astype(jnp.float32)
+    w = bp32 if scale is None else bp32 * scale.astype(jnp.float32)
+    wflat = jnp.repeat(w, s).reshape(n, 1)
+    vflat = values.reshape(n, 1)
+    iflat = idx.reshape(n, 1).astype(jnp.int32)
+    pad_n = (-n) % block_n
+    if pad_n:
+        wflat = jnp.pad(wflat, ((0, pad_n), (0, 0)))
+        vflat = jnp.pad(vflat, ((0, pad_n), (0, 0)))
+        # idx pads with -1: matches no stripe column, and the zero weight
+        # kills the product anyway
+        iflat = jnp.pad(iflat, ((0, pad_n), (0, 0)), constant_values=-1)
+    noise = noise.astype(jnp.float32)
+    pad_d = (-d) % block_d
+    if pad_d:
+        noise = jnp.pad(noise, (0, pad_d))
+    np_, dp = n + pad_n, d + pad_d
+    n_blocks = np_ // block_n
+    kern = functools.partial(_gather_superpose_kernel, float(vs_min),
+                             n_blocks, block_n, block_d)
+    agg, vs = pl.pallas_call(
+        kern,
+        grid=(dp // block_d, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i, j: (0, 0)),           # raw bp
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),     # weights
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),     # values
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),     # support
+            pl.BlockSpec((1, block_d), lambda i, j: (0, i)),     # noise stripe
+        ],
+        out_specs=[pl.BlockSpec((1, block_d), lambda i, j: (0, i)),
+                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, dp), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(bp32[None, :], wflat, vflat, iflat, noise[None, :])
+    return agg[0, :d], vs[0, 0]
+
+
+def gather_superpose_psum(values: jnp.ndarray, idx: jnp.ndarray,
+                          bp: jnp.ndarray, noise: jnp.ndarray, axis_name,
+                          d: int, scale: jnp.ndarray | None = None,
+                          varsigma_min: float | None = None):
+    """Compressed-cohort AirComp INSIDE ``jax.shard_map`` with the slot
+    axis laid over mesh client axis/axes ``axis_name``: this shard's
+    (m_local, s) rows scatter to d-space and contract locally, the local
+    aggregate partial and varsigma partial cross shards as ONE flat psum
+    (the one-psum-per-round invariant), and the shared AWGN joins the f32
+    accumulator once after the collective. ``scale`` folds int8
+    dequantization into the contraction weights; varsigma sums RAW b*p.
+
+    Returns ((d,) f32 aggregate, clamped varsigma), replicated."""
+    if varsigma_min is None:
+        from repro.core.aircomp import VARSIGMA_MIN
+        varsigma_min = VARSIGMA_MIN
+    m = values.shape[0]
+    bp32 = bp.astype(jnp.float32)
+    w = bp32 if scale is None else bp32 * scale.astype(jnp.float32)
+    rows = jnp.arange(m)[:, None]
+    dense = jnp.zeros((m, d), jnp.float32).at[rows, idx].add(
+        values.astype(jnp.float32))
+    acc = jax.lax.dot_general(
+        w[None, :], dense, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]               # (d,) partial
+    flat = jnp.concatenate([acc, jnp.sum(bp32)[None]])
+    flat = jax.lax.psum(flat, axis_name)
+    varsigma = jnp.maximum(flat[-1], varsigma_min)
+    agg = (flat[:-1] + noise.astype(jnp.float32)) / varsigma
+    return agg, varsigma
+
+
 def aircomp_finalize_tree(flat: jnp.ndarray, stacked_leaves, noise_leaves,
                           axis_name=None, varsigma_min: float | None = None):
     """The finishing half of ``aircomp_sum_tree_psum``: from the flat

@@ -18,9 +18,11 @@ import jax
 
 from repro.kernels.aircomp_sum import (aircomp_sum_pallas,
                                        backend_interpret_default,
+                                       gather_superpose_pallas,
                                        superpose_normalize_pallas)
 from repro.kernels.cosine_sim import cosine_partials_pallas
-from repro.kernels.round_stats import round_stats_jnp, round_stats_pallas
+from repro.kernels.round_stats import (compressed_round_stats,
+                                       round_stats_jnp, round_stats_pallas)
 from repro.kernels.swa_attention import swa_attention_pallas
 
 
@@ -91,6 +93,40 @@ def superpose_normalize(stacked: jnp.ndarray, powers: jnp.ndarray,
                      preferred_element_type=jnp.float32)
     agg = (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min)
     return agg, raw
+
+
+def gather_superpose(values, idx, bp, noise, *, d: int, scale=None,
+                     vs_min: float = 1e-12):
+    """Fused gather-superpose-decompress over the (m, s) compressed cohort
+    plane: ((d,) f32 aggregate, raw varsigma). Compiled one-hot-scatter
+    kernel on TPU; the scatter + f32 einsum twin elsewhere (the twin's
+    decompressed (m, d) rows exist only transiently inside this op — the
+    round carry never holds them). ``scale`` folds int8 dequantization
+    into the contraction weights; varsigma is the RAW sum of b*p."""
+    if kernels_compiled():
+        return gather_superpose_pallas(values, idx, bp, noise, d=d,
+                                       scale=scale, vs_min=vs_min,
+                                       interpret=False)
+    bp32 = bp.astype(jnp.float32)
+    w = bp32 if scale is None else bp32 * scale.astype(jnp.float32)
+    raw = jnp.sum(bp32)
+    m = values.shape[0]
+    rows = jnp.arange(m)[:, None]
+    dense = jnp.zeros((m, d), jnp.float32).at[rows, idx].add(
+        values.astype(jnp.float32))
+    acc = jnp.einsum("k,kd->d", w, dense,
+                     preferred_element_type=jnp.float32)
+    agg = (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min)
+    return agg, raw
+
+
+def round_stats_compressed(values, idx, resid, resid_idx, g, scale=None):
+    """Round stats over the compressed plane + EF residuals. Pure jnp on
+    every backend (gather-bound, no stripe contraction to fuse — see
+    ``repro.kernels.round_stats.compressed_round_stats``); routed through
+    ops so the round core has one kernel seam."""
+    return compressed_round_stats(values, idx, resid, resid_idx, g,
+                                  scale=scale)
 
 
 def aircomp_sum(stacked: jnp.ndarray, bp: jnp.ndarray,

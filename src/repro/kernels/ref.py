@@ -41,6 +41,27 @@ def superpose_normalize_ref(stacked: jnp.ndarray, powers: jnp.ndarray,
     return (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min), raw
 
 
+def gather_superpose_ref(values: jnp.ndarray, idx: jnp.ndarray,
+                         bp: jnp.ndarray, noise: jnp.ndarray, d: int,
+                         scale: jnp.ndarray | None = None,
+                         vs_min: float = 1e-12):
+    """Oracle for the gather-superpose-decompress kernel: scatter each
+    (m, s) compressed row to d-space, then the dense superpose —
+    ((sum_k w_k scatter(v_k) + noise) / max(sum bp, vs_min), sum bp)
+    with w = bp * scale (scale = the int8 dequantization factor; the
+    varsigma normalizer stays the RAW sum of b*p — scale reconstructs
+    payload magnitude, it is not transmit power)."""
+    m = values.shape[0]
+    bp32 = bp.astype(jnp.float32)
+    w = bp32 if scale is None else bp32 * scale.astype(jnp.float32)
+    raw = jnp.sum(bp32)
+    rows = jnp.arange(m)[:, None]
+    dense = jnp.zeros((m, d), jnp.float32).at[rows, idx].add(
+        values.astype(jnp.float32))
+    acc = jnp.einsum("k,kd->d", w, dense)
+    return (acc + noise.astype(jnp.float32)) / jnp.maximum(raw, vs_min), raw
+
+
 def cosine_partials_ref(deltas: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
     d32 = deltas.astype(jnp.float32)
     dot = d32 @ g.astype(jnp.float32)

@@ -258,3 +258,40 @@ def round_stats_jnp(deltas, g, payload=None, *, chunk: int | None = None):
                 pn2 = pn2 + part[2]
             gn2 = gn2 + part[-1]
     return dots, dn2, pn2, gn2
+
+
+# ---------------------------------------------------------------------------
+# compressed-plane stats: the sweep over (m, s) rows + EF residuals
+# ---------------------------------------------------------------------------
+
+def compressed_round_stats(values, idx, resid, resid_idx, g,
+                           scale=None):
+    """Round stats over the compressed cohort plane: (m, s) transmitted
+    values on per-row supports ``idx``, plus the (m, s) error-feedback
+    residuals on their own supports — so eq. 25's similarity factor sees
+    each slot's full reconstruction ``scatter(v) + scatter(e)`` without a
+    dense (m, d) plane ever materializing:
+
+        dot_k = <v_k, g[idx_k]> + <e_k, g[eidx_k]>
+        dn2_k = ||v_k||^2 + ||e_k||^2
+        pn2_k = ||v_k||^2      (the TRANSMITTED energy — what the power
+                                constraint (7) actually caps on the air)
+        gn2   = ||g||^2
+
+    ``scale`` dequantizes int8 values ((m,) per-row factors). Pure jnp on
+    every backend: the sweep is gather-bound (O(m*s) with random access
+    into g), with no K x d contraction for a Pallas stripe kernel to win
+    on — raveled single-leaf only, like the compressed plane itself.
+    Returns ``(dots, dn2, pn2, gn2)``, all f32."""
+    g32 = g.reshape(-1).astype(jnp.float32)
+    v32 = values.astype(jnp.float32)
+    if scale is not None:
+        v32 = v32 * scale.astype(jnp.float32)[:, None]
+    dots = jnp.einsum("ms,ms->m", v32, g32[idx])
+    pn2 = jnp.einsum("ms,ms->m", v32, v32)
+    dn2 = pn2
+    if resid is not None:
+        r32 = resid.astype(jnp.float32)
+        dots = dots + jnp.einsum("ms,ms->m", r32, g32[resid_idx])
+        dn2 = dn2 + jnp.einsum("ms,ms->m", r32, r32)
+    return dots, dn2, pn2, jnp.sum(g32 * g32)

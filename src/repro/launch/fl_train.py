@@ -34,6 +34,14 @@ clients; every reduction accumulates f32 and the globals stay f32
 aggregation: intra-pod partial superpositions every period, ONE cross-pod
 model-sized psum per N-period window, held partials staleness-weighted
 per eq. 25 (EXPERIMENTS.md §Multi-pod grouped aggregation).
+
+``--cohort-size m`` (fused/sharded) runs the active-cohort round: model
+rows exist only for the m in-flight slots. ``--compress topk|randmask``
+with ``--compress-ratio s/d`` additionally sparsifies the slot payloads
+to (m, s) compressed planes with per-client error-feedback residuals
+(``--no-error-feedback`` drops them), superposed by the fused
+gather-superpose-decompress kernel — the dense (m, d) plane never
+materializes (EXPERIMENTS.md §Compressed cohort payloads).
 """
 from examples.fl_noniid_mnist import main
 

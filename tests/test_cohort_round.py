@@ -224,7 +224,129 @@ def test_sharded_cohort_refusals():
         init_mlp_params(jax.random.PRNGKey(0)), _clients(), ChannelConfig(),
         SchedulerConfig(n_clients=K, seed=1), PAOTAConfig(),
         mesh=make_cpu_mesh(data=2, model=1), **kw)
-    with pytest.raises(ValueError, match="divisible"):
+    # the refusal names the shard count AND the nearest valid sizes
+    with pytest.raises(ValueError,
+                       match=r"2 client shards.*nearest valid.*2 and 4"):
         mk(cohort_size=3)          # 3 slots cannot tile 2 shards
     with pytest.raises(NotImplementedError, match="grouped"):
         mk(cohort_size=2, group_period=2)
+
+
+# ---------------------------------------------------------------------------
+# compressed payloads: compression-off / identity-compression regressions
+# ---------------------------------------------------------------------------
+
+def _advance_pair(a, b, n=6):
+    ha, hb = a.advance(n), b.advance(n)
+    for ra, rb in zip(ha, hb):
+        assert ra == rb          # full metric rows, bit-identical floats
+    np.testing.assert_array_equal(np.asarray(a.global_vec),
+                                  np.asarray(b.global_vec))
+
+
+def test_compress_off_is_default_cohort_path():
+    """``compress=None`` emits the uncompressed cohort program op-for-op:
+    same history, bit-identical trajectory."""
+    _advance_pair(_fused(transmit="delta", cohort_size=4),
+                  _fused(transmit="delta", cohort_size=4, compress=None))
+
+
+@pytest.mark.parametrize("scheme", ["topk", "randmask"])
+def test_identity_compression_bit_identical(scheme):
+    """s = d keeps every coordinate: the identity-compression branch
+    routes through the SAME dense stats + superpose ops, and f32 error
+    feedback carries exactly-zero residuals — bit-identical to the
+    uncompressed cohort path."""
+    _advance_pair(
+        _fused(transmit="delta", cohort_size=4),
+        _fused(transmit="delta", cohort_size=4, compress=scheme,
+               compress_ratio=1.0))
+
+
+def test_identity_compression_bf16_ef_off_bit_identical():
+    """bf16 slots at s = d match the uncompressed bf16 cohort path only
+    with error feedback OFF: with EF on, the residual captures the bf16
+    rounding error and compensates it next round — an intended
+    improvement the dense path cannot express, not a drift."""
+    _advance_pair(
+        _fused(transmit="delta", cohort_size=4, pending_dtype="bfloat16"),
+        _fused(transmit="delta", cohort_size=4, pending_dtype="bfloat16",
+               compress="topk", compress_ratio=1.0, error_feedback=False))
+
+
+def test_compressed_carry_is_m_by_s():
+    """The point of the compression: payload planes shrink from (m, d) to
+    (m, s) + an (m, s) index plane — d leaves the carry entirely when
+    error feedback is off."""
+    m = 4
+    srv = _fused(transmit="delta", cohort_size=m, compress="randmask",
+                 compress_ratio=0.25, error_feedback=False)
+    srv.advance(2)
+    s = srv.compress_s
+    assert s == max(1, round(srv.d * 0.25))
+    assert srv._carry.pending is None
+    assert srv._carry.deltas.shape == (m, s)
+    assert srv._carry.slot_idx.shape == (m, s)
+    assert srv._carry.slot_resid is None and srv._carry.resid_val is None
+    srv_ef = _fused(transmit="delta", cohort_size=m, compress="topk",
+                    compress_ratio=0.25, slot_dtype="int8")
+    srv_ef.advance(2)
+    assert srv_ef._carry.deltas.dtype == jnp.int8
+    assert srv_ef._carry.slot_scale.shape == (m,)
+    assert srv_ef._carry.slot_resid.shape == (m, srv_ef.compress_s)
+    assert srv_ef._carry.resid_val.shape == (K, srv_ef.compress_s)
+
+
+def test_compressed_run_is_finite_and_participates():
+    for scheme, sd in [("topk", None), ("randmask", "int8")]:
+        srv = _fused(transmit="delta", cohort_size=4, compress=scheme,
+                     compress_ratio=0.25, slot_dtype=sd)
+        rows = srv.advance(8)
+        assert any(r["n_participants"] > 0 for r in rows)
+        assert np.isfinite(np.asarray(srv.global_vec)).all()
+
+
+def test_compress_validation():
+    with pytest.raises(ValueError, match="cohort"):
+        _fused(transmit="delta", compress="topk")
+    with pytest.raises(ValueError, match="delta"):
+        _fused(transmit="model", cohort_size=4, compress="topk")
+    with pytest.raises(ValueError, match="compress"):
+        _fused(transmit="delta", cohort_size=4, slot_dtype="int8")
+    with pytest.raises(ValueError, match="compress_ratio"):
+        _fused(transmit="delta", cohort_size=4, compress="topk",
+               compress_ratio=0.0)
+    with pytest.raises(ValueError, match="compress"):
+        _fused(transmit="delta", cohort_size=4, compress="dct")
+    with pytest.raises(NotImplementedError, match="pytree"):
+        _fused(transmit="delta", cohort_size=4, compress="topk",
+               params_mode="pytree")
+
+
+@pytest.mark.multidevice
+def test_sharded_identity_compression_bit_identical():
+    from conftest import require_host_devices
+    from repro.fl import ShardedPAOTA
+    from repro.launch.mesh import make_cpu_mesh
+    require_host_devices(2)
+    mk = lambda **kw: ShardedPAOTA(
+        init_mlp_params(jax.random.PRNGKey(0)), _clients(), ChannelConfig(),
+        SchedulerConfig(n_clients=K, seed=1), PAOTAConfig(transmit="delta"),
+        mesh=make_cpu_mesh(data=2, model=1), cohort_size=4, **kw)
+    _advance_pair(mk(), mk(compress="randmask", compress_ratio=1.0))
+
+
+@pytest.mark.multidevice
+def test_sharded_compressed_run_is_finite():
+    from conftest import require_host_devices
+    from repro.fl import ShardedPAOTA
+    from repro.launch.mesh import make_cpu_mesh
+    require_host_devices(2)
+    srv = ShardedPAOTA(
+        init_mlp_params(jax.random.PRNGKey(0)), _clients(), ChannelConfig(),
+        SchedulerConfig(n_clients=K, seed=1), PAOTAConfig(transmit="delta"),
+        mesh=make_cpu_mesh(data=2, model=1), cohort_size=4,
+        compress="topk", compress_ratio=0.25, slot_dtype="int8")
+    rows = srv.advance(8)
+    assert any(r["n_participants"] > 0 for r in rows)
+    assert np.isfinite(np.asarray(srv.global_vec)).all()
