@@ -103,6 +103,12 @@ class BenchSetting:
     error_feedback: bool = True  # compress only: per-client residual
                                  # planes re-inject what sparsification
                                  # dropped (off = plain sparsification)
+    tp: int = 1                  # sharded + pytree only: intra-client
+                                 # tensor-parallel extent — the mesh gains
+                                 # a "tp" axis and every client replica's
+                                 # stacked payload leaves TP-shard over
+                                 # it (per-device carry ~1/tp; one
+                                 # clients x tp psum per round)
 
     @classmethod
     def from_env(cls, **kw):
@@ -149,6 +155,14 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
             kw = {}
             if s.engine == "sharded" and s.group_period:
                 kw["group_period"] = s.group_period
+            if s.engine == "sharded" and s.tp > 1:
+                # ("pod","data","tp") mesh: the tp extent comes off the
+                # client axis (the server refuses raveled mode itself)
+                import jax
+                from repro.launch.mesh import make_pod_mesh
+                kw["mesh"] = make_pod_mesh(
+                    pods=1, data=max(len(jax.devices()) // s.tp, 1),
+                    tp=s.tp)
             if s.cohort_size:
                 kw["cohort_size"] = s.cohort_size
             transmit = "model"

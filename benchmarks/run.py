@@ -17,6 +17,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   cohort_round — active-cohort (m, d) payload plane vs dense carry:
              driver + synthetic-stream rounds/sec and carry bytes at
              K in {1e3, 1e5, 1e6} (1e6 = state-plane-only acceptance run)
+  tp_round — intra-client TP on the ("pod","data","tp") mesh: the
+             minicpm-2b-reduced pytree federation at tp in {1, 2, 4},
+             per-device carry bytes ~1/tp with ONE cross-client
+             model-sized psum (compiled-HLO checked)
   fig3     — train-loss robustness vs noise (paper Fig. 3)
   fig4     — test accuracy vs rounds/time (paper Fig. 4)
   table1   — time/rounds to target accuracy (paper Table I)
@@ -36,8 +40,8 @@ import traceback
 
 MODULES = ["bound", "kernels_bench", "roofline_bench", "fl_engine_bench",
            "fused_round_bench", "round_perf_bench", "sharded_round_bench",
-           "grouped_round_bench", "cohort_round_bench", "fig3", "fig4",
-           "table1", "ablation"]
+           "grouped_round_bench", "cohort_round_bench", "tp_round_bench",
+           "fig3", "fig4", "table1", "ablation"]
 ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "fl_engine": "fl_engine_bench", "engine": "fl_engine_bench",
            "fused_round": "fused_round_bench", "fused": "fused_round_bench",
@@ -47,7 +51,9 @@ ALIASES = {"kernels": "kernels_bench", "roofline": "roofline_bench",
            "grouped_round": "grouped_round_bench",
            "grouped": "grouped_round_bench",
            "cohort_round": "cohort_round_bench",
-           "cohort": "cohort_round_bench"}
+           "cohort": "cohort_round_bench",
+           "tp_round": "tp_round_bench",
+           "tp": "tp_round_bench"}
 
 
 def main() -> None:

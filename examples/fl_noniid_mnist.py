@@ -61,6 +61,15 @@ def main():
                          "re-enter later rounds")
     ap.add_argument("--compress-ratio", type=float, default=1.0 / 16.0,
                     help="s/d for --compress (default 1/16)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="sharded + --params-mode pytree: intra-client "
+                         "tensor-parallel extent — the mesh becomes "
+                         "('pod','data','tp') with the tp extent taken "
+                         "off the client axis, and every client's stacked "
+                         "payload leaves TP-shard over it (per-device "
+                         "model-plane carry ~1/tp; the round keeps ONE "
+                         "cross-client model-sized psum, which also "
+                         "gathers the TP blocks)")
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="drop the error-feedback residual planes (plain "
                          "sparsification; frees the per-client (K, s) "
@@ -77,7 +86,8 @@ def main():
                               cohort_size=args.cohort_size,
                               compress=args.compress,
                               compress_ratio=args.compress_ratio,
-                              error_feedback=not args.no_error_feedback)
+                              error_feedback=not args.no_error_feedback,
+                              tp=args.tp)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):

@@ -110,6 +110,24 @@ assert any("cross_pod_big_allreduce_per_window=1" in r.get("derived", "")
            for r in art["rows"]), art["rows"]
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
+
+    # intra-client-TP smoke: the hidden-128 MLP federation across the
+    # tp in {1, 2, 4} ladder on forced (1, 2, tp) meshes — per-device
+    # carry bytes must fall ~1/tp with exactly ONE cross-client
+    # model-sized all-reduce at every rung
+    rm -f "$BENCH_OUT/BENCH_tp_round_smoke.json"
+    python -m benchmarks.tp_round_bench smoke
+    python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_tp_round_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("smoke_tp4" in n for n in names), names
+assert any("per_device_bytes_tp1_over_tp4=4" in r.get("derived", "")
+           for r in art["rows"]), art["rows"]
+assert all("cross_client_big_allreduce=1" in r["derived"]
+           for r in art["rows"] if "smoke_tp" in r["name"]), art["rows"]
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
+EOF
 fi
 
 # perf trajectory gate: every artifact the smokes regenerated must stay

@@ -80,7 +80,8 @@ def stacked_tree_noise(key, stacked_leaves, sigma_n):
 
 def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
                             mask: jnp.ndarray, key, sigma_n: float,
-                            use_kernel: bool = False, axis_name=None):
+                            use_kernel: bool = False, axis_name=None,
+                            tp=None):
     """Eq. (8): w_g^{r+1} = (sum_k b_k p_k w_k + n) / sum_k b_k p_k.
 
     ``stacked_models``: a pytree of client-stacked (K, ...) leaves; the
@@ -94,13 +95,31 @@ def paota_aggregate_stacked(stacked_models, powers: jnp.ndarray,
     (``repro.kernels.aircomp_sum.aircomp_sum_tree_psum``), not psum'd leaf
     by leaf — with the single shared noise realization drawn from the
     replicated ``key`` and added once, after the collective: the same
-    eq.-6 semantics as the single-device reduction."""
+    eq.-6 semantics as the single-device reduction.
+
+    ``tp``: intra-client ``repro.sharding.tp.TPTopology`` when the leaves
+    are additionally TP-local model blocks — the single psum then spans
+    the client axes AND ``tp.axes`` (superpose + TP-gather in one
+    collective), and the AWGN is drawn at the FULL leaf shapes from the
+    same replicated key, so the realization is identical across every TP
+    layout (the noise-split determinism contract; EXPERIMENTS.md
+    §Intra-client TP). Aggregate leaves come back FULL-shape."""
     leaves, treedef = jax.tree_util.tree_flatten(stacked_models)
     single = len(leaves) == 1 and leaves[0].ndim == 2
     bp = powers * mask
     if axis_name is not None:
         from repro.kernels.aircomp_sum import (aircomp_sum_psum,
-                                               aircomp_sum_tree_psum)
+                                               aircomp_sum_tree_psum,
+                                               aircomp_sum_tree_psum_tp)
+        if tp is not None:
+            from repro.sharding.tp import tp_full_structs
+            noise = stacked_tree_noise(key, tp_full_structs(leaves, tp),
+                                       sigma_n)
+            agg_leaves, varsigma = aircomp_sum_tree_psum_tp(
+                leaves, bp, noise, axis_name, tp,
+                varsigma_min=VARSIGMA_MIN)
+            return (jax.tree_util.tree_unflatten(treedef, agg_leaves),
+                    varsigma)
         noise = stacked_tree_noise(key, leaves, sigma_n)
         if single:
             # noise stays f32: the psum entry accumulates f32 and returns

@@ -89,6 +89,16 @@ class _PrefixEvaluator:
 # historical small-K trajectory bit-identical.
 PREFIX_K_THRESHOLD = 4096
 
+# The P2 objective is often FLAT near its optimum (many grid cells within
+# float noise of the minimum), so a bare argmin's winning index depends on
+# the reduction order of the evaluator — dense vs prefix, host vs psum,
+# dense vs cohort-gathered all disagreed by a cell and refined to taus a
+# grid-step apart. Every solver therefore picks the LOWEST-index cell
+# within this relative band of the minimum (vals > 0 always: c0 = sigma^2
+# d > 0), making the bracket — and hence beta — independent of summation
+# order.
+WATERFILL_TIE_RTOL = 32 * float(np.finfo(np.float32).eps)
+
 
 def solve_waterfill(prob: P2Problem, grid: int = 4096,
                     refine: int = 60, method: str = "auto") -> SolveResult:
@@ -119,7 +129,8 @@ def solve_waterfill(prob: P2Problem, grid: int = 4096,
 
     # grid scan + golden-section refine, one loop for both evaluators
     vals = objective(taus)
-    j = int(np.argmin(vals))
+    vmin = float(np.min(vals))
+    j = int(np.argmax(vals <= vmin * (1.0 + WATERFILL_TIE_RTOL)))
     a, bnd = taus[max(j - 1, 0)], taus[min(j + 1, grid - 1)]
     gr = (np.sqrt(5.0) - 1) / 2
     for _ in range(refine):
@@ -205,7 +216,8 @@ def waterfill_beta_jnp(rho, theta, p_max, b, c1: float, c0: float,
     ts = jnp.clip(taus[:, None], lo[None, :], hi[None, :]) * b[None, :]
     s = ksum(ts, axis=1)
     vals = (c1 * ksum(ts * ts, axis=1) + c0) / jnp.maximum(s * s, 1e-30)
-    j = jnp.argmin(vals)
+    vmin = jnp.min(vals)
+    j = jnp.argmax(vals <= vmin * (1.0 + WATERFILL_TIE_RTOL))
     bracket = (taus[jnp.maximum(j - 1, 0)], taus[jnp.minimum(j + 1, grid - 1)])
 
     gr = (np.sqrt(5.0) - 1.0) / 2.0

@@ -67,7 +67,7 @@ def _accumulate(parts):
     return functools.reduce(operator.add, parts)
 
 
-def client_sq_norms(tree):
+def client_sq_norms(tree, tp_axes=None):
     """(K,) per-client ||.||^2 over every leaf's trailing dims.
 
     Computed as a batched dot (``einsum kd,kd->k``), not ``sum(x*x, -1)``
@@ -75,22 +75,34 @@ def client_sq_norms(tree):
     full write+read of the plane) but contracts the batched dot in one
     streaming pass. Same formulation as the fused round-stats sweep
     (``repro.kernels.round_stats``), so the host reference's constraint-
-    (7) norms stay bit-identical to the fused core's."""
-    return _accumulate([jnp.einsum("kd,kd->k", _leaf2d(l), _leaf2d(l))
-                        for l in jax.tree_util.tree_leaves(tree)])
+    (7) norms stay bit-identical to the fused core's.
+
+    ``tp_axes``: mesh axis name(s) when every leaf's trailing dims are
+    this shard's TP-local block under ``jax.shard_map`` — the accumulated
+    partial is psum'd over them so every TP shard returns the full-model
+    norm. Callers with mixed sharded/replicated leaves split the tree
+    first (``repro.kernels.round_stats.round_stats_tp`` does)."""
+    out = _accumulate([jnp.einsum("kd,kd->k", _leaf2d(l), _leaf2d(l))
+                       for l in jax.tree_util.tree_leaves(tree)])
+    return out if not tp_axes else jax.lax.psum(out, tp_axes)
 
 
-def client_dots(tree, vec_tree):
-    """(K,) per-client <leaf_k, vec> accumulated across leaves."""
-    return _accumulate([_leaf2d(l) @ g.reshape(-1)
-                        for l, g in zip(jax.tree_util.tree_leaves(tree),
-                                        jax.tree_util.tree_leaves(vec_tree))])
+def client_dots(tree, vec_tree, tp_axes=None):
+    """(K,) per-client <leaf_k, vec> accumulated across leaves;
+    ``tp_axes`` as in ``client_sq_norms`` (vec_tree leaves must be the
+    matching TP-local blocks)."""
+    out = _accumulate([_leaf2d(l) @ g.reshape(-1)
+                       for l, g in zip(jax.tree_util.tree_leaves(tree),
+                                       jax.tree_util.tree_leaves(vec_tree))])
+    return out if not tp_axes else jax.lax.psum(out, tp_axes)
 
 
-def global_sq_norm(vec_tree):
-    """Scalar ||vec||^2 over all leaves of an unstacked params tree."""
-    return _accumulate([jnp.sum(g * g)
-                        for g in jax.tree_util.tree_leaves(vec_tree)])
+def global_sq_norm(vec_tree, tp_axes=None):
+    """Scalar ||vec||^2 over all leaves of an unstacked params tree;
+    ``tp_axes`` as in ``client_sq_norms``."""
+    out = _accumulate([jnp.sum(g * g)
+                       for g in jax.tree_util.tree_leaves(vec_tree)])
+    return out if not tp_axes else jax.lax.psum(out, tp_axes)
 
 
 def cosine_similarity(deltas, global_dir, use_kernel: bool = False, eps=1e-12):

@@ -272,7 +272,7 @@ class RoundStreams(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def round_factors(deltas, payload, global_vec, prev_global, stal, omega,
-                  eps=1e-12):
+                  eps=1e-12, tp=None):
     """Stage 2 of the round, one delta-plane sweep: eq.-25 staleness
     factors rho_k, gradient-similarity factors theta_k, and the payload
     sq-norms the power constraint (7) needs — all from ONE fused pass
@@ -282,12 +282,16 @@ def round_factors(deltas, payload, global_vec, prev_global, stal, omega,
 
     Per-client along the leading axis and shard-local under the client
     mesh axis (every reduction runs over the model dims, which each shard
-    holds whole — per-leaf partials accumulate locally, no collective).
+    holds whole — per-leaf partials accumulate locally, no collective —
+    UNLESS an intra-client ``tp`` topology is passed: each shard then
+    holds only its TP-local model block and the sweep closes with one
+    small psum over ``tp.axes``; see ``kernels.round_stats
+    .round_stats_tp``).
 
     Returns (rho, theta, w_norm2)."""
     from repro.kernels.ops import round_stats
     gdir = jax.tree_util.tree_map(jnp.subtract, global_vec, prev_global)
-    dots, dn2, pn2, gn2 = round_stats(deltas, gdir, payload)
+    dots, dn2, pn2, gn2 = round_stats(deltas, gdir, payload, tp=tp)
     gnorm = jnp.sqrt(gn2)
     den = jnp.sqrt(jnp.maximum(dn2, eps) * jnp.maximum(gn2, eps))
     cos = jnp.where(gnorm < 1e-12, 0.0, dots / den)
@@ -414,12 +418,23 @@ def _compress_plane(comp, *, rcfg: RoundCfg, streams: RoundStreams, t):
 def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
                      streams: RoundStreams, axis_name=None,
                      grouping: GroupTopology | None = None,
-                     window_j: int = 0):
+                     window_j: int = 0, tp=None):
     """One PAOTA aggregation period as a pure function.
 
     ``axis_name=None`` is the single-device form. With a mesh axis name
     (or tuple of names), the (K,) / (K, d) carry rows are this shard's
     clients and the cross-client reductions go through collectives.
+
+    Intra-client TP (``tp``: ``repro.sharding.tp.TPTopology``, sharded
+    pytree mode only): the payload planes additionally hold only this
+    device's TP-local block of each leaf. Training stays replicated
+    compute over the TP axes (full leaves from the replicated global);
+    the stats sweep TP-slices the global direction and psums once over
+    ``tp.axes``; the superposition's single model-sized psum spans
+    clients x TP (superpose + gather in one collective) with the AWGN
+    drawn at FULL shapes from the replicated key; and the carry writes
+    slice the trained rows down to the TP-local block. ``tp=None`` (any
+    TP extent-1 mesh) is op-for-op the historical program.
 
     Grouped aggregation (``rcfg.group_period`` N >= 1 with a
     ``grouping`` topology): ``window_j`` is this period's static position
@@ -444,10 +459,33 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     Returns (next_carry, per-round metrics dict of replicated scalars)."""
     if rcfg.cohort_size:
         if grouping is not None:
-            raise NotImplementedError("active-cohort mode does not compose "
-                                      "with grouped aggregation yet")
+            raise NotImplementedError(
+                f"active-cohort mode (cohort_size={rcfg.cohort_size}) does "
+                f"not compose with grouped aggregation (group_period="
+                f"{rcfg.group_period}) yet — the held cross-pod partial "
+                f"would need per-slot staleness bookkeeping; the nearest "
+                f"supported configurations are cohort_size="
+                f"{rcfg.cohort_size} with group_period=0 (flat sync every "
+                f"period) or group_period={rcfg.group_period} with "
+                f"cohort_size=0 (dense payload planes)")
+        if tp is not None:
+            raise NotImplementedError(
+                f"active-cohort mode (cohort_size={rcfg.cohort_size}) does "
+                f"not compose with intra-client TP (tp axes {tp.axes}) yet "
+                f"— the (m, s) slot planes are raveled and the TP split is "
+                f"per-leaf; the nearest supported configurations are "
+                f"cohort_size={rcfg.cohort_size} on a client-axes-only "
+                f"mesh, or TP with cohort_size=0 (dense payload planes)")
         return _cohort_round_step(carry, x, y, rcfg=rcfg, streams=streams,
                                   axis_name=axis_name)
+    if tp is not None and grouping is not None:
+        raise NotImplementedError(
+            f"grouped aggregation (group_period={rcfg.group_period}) does "
+            f"not compose with intra-client TP (tp axes {tp.axes}) yet — "
+            f"the held intra-pod partial is not TP-split; the nearest "
+            f"supported configurations are group_period="
+            f"{rcfg.group_period} with TP extent 1, or TP with "
+            f"group_period=0 (flat sync every period)")
     k_local = carry.ready.shape[0]
     grouped = grouping is not None and rcfg.group_period >= 1
     sync = (not grouped) or (window_j == rcfg.group_period - 1)
@@ -486,7 +524,7 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     payload = carry.deltas if rcfg.transmit_delta else carry.pending
     rho, theta, w_norm2 = round_factors(
         carry.deltas, None if rcfg.transmit_delta else carry.pending,
-        carry.global_vec, carry.prev_global, stal, rcfg.omega)
+        carry.global_vec, carry.prev_global, stal, rcfg.omega, tp=tp)
 
     # 3. P2 -> beta -> powers (exact water-filling, pure jnp; the grid and
     # golden-section reductions over K run as psums under sharding). At a
@@ -513,7 +551,7 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         # (or the single-device einsum) with the noise joining once after
         agg, varsigma = paota_aggregate_stacked(
             payload, powers, b, streams.noise_key(carry.t), rcfg.sigma_n,
-            axis_name=axis_name)
+            axis_name=axis_name, tp=tp)
         new_global, new_prev = guarded_global_update(
             carry.global_vec, carry.prev_global, agg, varsigma,
             delta=rcfg.transmit_delta)
@@ -560,25 +598,50 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         m = restart.reshape((k_local,) + (1,) * (new.ndim - 1))
         return jnp.where(m, new, old)
 
-    pending = None if carry.pending is None else jax.tree_util.tree_map(
-        lambda tr, p: row_select(tr.astype(p.dtype), p),
-        trained, carry.pending)
-    if dtype == jnp.float32 and pending is not None:
-        # derive the delta rows from the NEW pending (identical values:
-        # ready rows of `pending` ARE the trained rows) — this lets XLA
-        # fuse the raveled concat straight into both carry writes instead
-        # of materializing a separate (K, d) trained plane
-        deltas = jax.tree_util.tree_map(
-            lambda p, dl, g: row_select(p - g[None], dl),
-            pending, carry.deltas, new_global)
+    if tp is not None:
+        # TP-active carry writes: the payload planes hold only this
+        # device's TP-local block of each leaf, so the (TP-replicated)
+        # trained rows and new global are sliced down to the block first
+        # — after this the write is the general delta form below
+        from repro.sharding.tp import tp_slice
+        tdef = jax.tree_util.tree_structure(carry.deltas)
+        tr_l = jax.tree_util.tree_leaves(trained)
+        g_l = jax.tree_util.tree_leaves(new_global)
+        dl_l = jax.tree_util.tree_leaves(carry.deltas)
+        p_l = (jax.tree_util.tree_leaves(carry.pending)
+               if carry.pending is not None else [None] * len(tr_l))
+        new_p, new_d = [], []
+        for tr, g, dl, p, dim in zip(tr_l, g_l, dl_l, p_l, tp.leaf_dims):
+            if dim >= 0:
+                tr = tp_slice(tr, dim + 1, tp)
+                g = tp_slice(g, dim, tp)
+            if p is not None:
+                new_p.append(row_select(tr.astype(p.dtype), p))
+            new_d.append(row_select((tr - g[None]).astype(dl.dtype), dl))
+        pending = (jax.tree_util.tree_unflatten(tdef, new_p)
+                   if carry.pending is not None else None)
+        deltas = jax.tree_util.tree_unflatten(tdef, new_d)
     else:
-        # bf16 storage (the delta MUST come from the f32 trained rows —
-        # deriving it from the already-rounded pending would cancel two
-        # large rounded models instead of rounding one small delta), and
-        # the pending-less transmit='delta' carry
-        deltas = jax.tree_util.tree_map(
-            lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype), dl),
-            trained, carry.deltas, new_global)
+        pending = None if carry.pending is None else jax.tree_util.tree_map(
+            lambda tr, p: row_select(tr.astype(p.dtype), p),
+            trained, carry.pending)
+        if dtype == jnp.float32 and pending is not None:
+            # derive the delta rows from the NEW pending (identical values:
+            # ready rows of `pending` ARE the trained rows) — this lets XLA
+            # fuse the raveled concat straight into both carry writes
+            # instead of materializing a separate (K, d) trained plane
+            deltas = jax.tree_util.tree_map(
+                lambda p, dl, g: row_select(p - g[None], dl),
+                pending, carry.deltas, new_global)
+        else:
+            # bf16 storage (the delta MUST come from the f32 trained rows —
+            # deriving it from the already-rounded pending would cancel two
+            # large rounded models instead of rounding one small delta),
+            # and the pending-less transmit='delta' carry
+            deltas = jax.tree_util.tree_map(
+                lambda tr, dl, g: row_select((tr - g[None]).astype(dl.dtype),
+                                             dl),
+                trained, carry.deltas, new_global)
 
     n_upl = ksum(b)
     denom = jnp.maximum(n_upl, 1.0)
@@ -947,17 +1010,17 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
 
 
 def scan_rounds(carry: RoundCarry, x, y, n_rounds: int, *, rcfg: RoundCfg,
-                streams: RoundStreams, axis_name=None):
+                streams: RoundStreams, axis_name=None, tp=None):
     """``lax.scan`` of ``paota_round_step`` over ``n_rounds`` periods —
     zero host round-trips inside. The scan nests cleanly under
     ``jax.shard_map`` (the sharded driver wraps THIS function, so a whole
     multi-round advance is one collective program). Drivers jit this with
     the carry donated (``donate_argnums``): the K x d planes of scan r
     are reused in place by scan r+1 instead of being copied across the
-    call boundary."""
+    call boundary. ``tp``: intra-client TP topology, threaded per step."""
     def step(c, _):
         return paota_round_step(c, x, y, rcfg=rcfg, streams=streams,
-                                axis_name=axis_name)
+                                axis_name=axis_name, tp=tp)
     return jax.lax.scan(step, carry, None, length=n_rounds)
 
 

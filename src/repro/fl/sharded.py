@@ -23,10 +23,23 @@ stack exactly as before; ``"pytree"`` carries the params pytree natively,
 each client-stacked leaf placed by ``repro.sharding.rules
 .stack_client_specs`` under the mesh client axes — so a transformer-config
 client federation (e.g. a minicpm-class reduced config) runs full sharded
-PAOTA rounds with its params in their natural structure. Intra-client
-sharding of the trailing (model) dims is not yet wired into the round's
-tree reductions, so pytree mode requires every non-client mesh axis to
-have extent 1 (the flattened-client layout of DESIGN.md §4).
+PAOTA rounds with its params in their natural structure.
+
+Intra-client TP (``tp_axes``, pytree mode): on a ("pod", "data", "tp")
+mesh (``make_pod_mesh(..., tp=N)``) each stacked payload leaf additionally
+TP-shards one trailing dim over the TP axis — per-device model-plane
+bytes drop ~1/TP, the wall that caps how large a single client can be.
+Storage-parallel, compute-replicated: globals and local training stay
+replicated over TP (full leaves everywhere), the stats sweep closes with
+one small psum over the TP axes, the AirComp superposition stays ONE
+model-sized psum (now spanning clients x TP — superpose and TP-gather in
+the same collective), the AWGN is drawn at FULL shapes from the
+replicated key (identical realization for every TP layout), and the
+carry writes slice trained rows to the TP-local block
+(``repro.sharding.tp``). TP extent 1 passes ``tp=None`` into the round —
+op-for-op, bit-identical to the flat program. Any OTHER non-client mesh
+axis with extent > 1 still refuses in pytree mode (name it in
+``tp_axes`` — or ``client_axes`` — to use it).
 
 Phantom-client padding: a client-axis extent that does not divide K no
 longer refuses — the federation pads to the next multiple with masked
@@ -132,6 +145,13 @@ class ShardedPAOTA(FusedPAOTA):
     psum fires once per N-period window. ``advance`` then moves in whole
     windows (``n_rounds`` must be a multiple of N). N=1 is the flat
     program bit-for-bit.
+
+    ``tp_axes`` (pytree mode): mesh axes the model storage TP-shards over
+    inside each client shard (default: the mesh's "tp" axis when present).
+    Extent 1 is the flat program bit-for-bit; extent > 1 slices one
+    trailing dim of each stacked payload leaf (placement from
+    ``stack_client_specs``; leaves with no dividing dim stay
+    TP-replicated) — see the module docstring.
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
@@ -142,7 +162,7 @@ class ShardedPAOTA(FusedPAOTA):
                  cohort_size: int | None = None, scenario=None,
                  compress: str | None = None, compress_ratio: float = 1.0,
                  slot_dtype: str | None = None,
-                 error_feedback: bool = True):
+                 error_feedback: bool = True, tp_axes=None):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -152,22 +172,82 @@ class ShardedPAOTA(FusedPAOTA):
             raise ValueError(f"mesh {mesh.axis_names} has no client axis")
         self.client_axes = axes
         self.n_shards = int(math.prod(mesh.shape[a] for a in axes))
+        # intra-client TP: default to the mesh's dedicated "tp" axis;
+        # extent 1 (or no such axis) keeps the historical flat program
+        if tp_axes is None:
+            tp_ax = tuple(a for a in mesh.axis_names
+                          if a == "tp" and a not in axes)
+        else:
+            tp_ax = tuple(tp_axes)
+            bad = [a for a in tp_ax
+                   if a not in mesh.axis_names or a in axes]
+            if bad:
+                raise ValueError(
+                    f"tp_axes={tp_ax}: {bad} must be non-client mesh axes "
+                    f"(mesh axes {mesh.axis_names}, client_axes={axes})")
+        self.tp_axes = tp_ax
+        self.tp_shards = int(math.prod(mesh.shape[a] for a in tp_ax)) \
+            if tp_ax else 1
+        self._tp = None
+        if self.tp_shards > 1:
+            if len(self.tp_axes) > 1:
+                raise NotImplementedError(
+                    f"tp_axes={self.tp_axes}: intra-client TP supports a "
+                    f"single mesh axis (leaf dims shard over one axis); "
+                    f"the nearest supported configuration merges them into "
+                    f"one 'tp' axis of extent {self.tp_shards}")
+            if compress:
+                raise NotImplementedError(
+                    f"compress='{compress}' does not compose with "
+                    f"intra-client TP (tp axes {self.tp_axes}, extent "
+                    f"{self.tp_shards}) yet — the (m, s) compressed slot "
+                    f"planes are raveled coordinate sets with no per-leaf "
+                    f"TP split; the nearest supported configurations are "
+                    f"compress='{compress}' on a client-axes-only mesh, or "
+                    f"TP with compress=None")
+            if cohort_size:
+                raise NotImplementedError(
+                    f"cohort_size={cohort_size} does not compose with "
+                    f"intra-client TP (tp axes {self.tp_axes}, extent "
+                    f"{self.tp_shards}) yet — the cohort payload plane is "
+                    f"raveled (m, d) slots; the nearest supported "
+                    f"configurations are cohort_size={cohort_size} on a "
+                    f"client-axes-only mesh, or TP with cohort_size=None "
+                    f"(dense payload planes)")
+            if group_period:
+                raise NotImplementedError(
+                    f"group_period={group_period} does not compose with "
+                    f"intra-client TP (tp axes {self.tp_axes}, extent "
+                    f"{self.tp_shards}) yet — the held intra-pod partial "
+                    f"is a flat model-sized accumulator with no TP split; "
+                    f"the nearest supported configurations are "
+                    f"group_period={group_period} with TP extent 1, or TP "
+                    f"with group_period=0 (flat sync every period)")
+            if params_mode != "pytree":
+                raise NotImplementedError(
+                    f"params_mode='raveled' does not compose with "
+                    f"intra-client TP (tp axes {self.tp_axes}, extent "
+                    f"{self.tp_shards}) — the flat (K, d) stack has no "
+                    f"leaf dims to TP-shard; the nearest supported "
+                    f"configurations are params_mode='pytree' (per-leaf TP "
+                    f"placement), or raveled on a client-axes-only mesh")
         if params_mode == "pytree":
             other = {a: mesh.shape[a] for a in mesh.axis_names
-                     if a not in axes and mesh.shape[a] > 1}
+                     if a not in axes and a not in self.tp_axes
+                     and mesh.shape[a] > 1}
             if other:
                 named = ", ".join(f"'{a}' (extent {mesh.shape[a]})"
                                   for a in sorted(other))
                 raise NotImplementedError(
-                    f"params_mode='pytree' shards the client axes only, but "
-                    f"non-client mesh axis {named} has extent > 1: it would "
-                    f"split the stacked leaves' model dims, which the "
-                    f"round's tree reductions do not yet psum over "
-                    f"(intra-client TP is the ROADMAP follow-on). Either "
-                    f"use params_mode='raveled' (the flat (K, d) federation "
-                    f"over the client axes), rebuild the mesh with extent 1 "
-                    f"on {sorted(other)}, or include the axis in "
-                    f"client_axes.")
+                    f"params_mode='pytree' shards the client axes and the "
+                    f"tp_axes only, but non-client mesh axis {named} has "
+                    f"extent > 1: it would split the stacked leaves' model "
+                    f"dims outside the round's TP-aware reductions. Either "
+                    f"name it in tp_axes (intra-client TP — the model "
+                    f"storage shards over it), use params_mode='raveled' "
+                    f"(the flat (K, d) federation over the client axes), "
+                    f"rebuild the mesh with extent 1 on {sorted(other)}, "
+                    f"or include the axis in client_axes.")
         # grouped-aggregation topology: pod axes index the groups, the
         # remaining client axes are intra-pod
         if group_period < 0:
@@ -258,17 +338,26 @@ class ShardedPAOTA(FusedPAOTA):
         ax = axes if len(axes) != 1 else axes[0]
         self._ax = ax
         if params_mode == "pytree":
+            tp_on = self.tp_shards > 1
             stacked_struct = jax.tree_util.tree_map(
                 lambda g: jax.ShapeDtypeStruct((self.k_pad,) + g.shape,
                                                g.dtype), self._init_global)
-            pend_spec = stack_client_specs(stacked_struct, model_cfg, mesh,
-                                           axes)
-            # every non-client axis is extent 1 (guard above), so dropping
+            pend_spec = stack_client_specs(
+                stacked_struct, model_cfg, mesh, axes,
+                tp_axis=(self.tp_axes[0] if tp_on else None))
+            # every kept-out axis is extent 1 (guard above), so dropping
             # its trailing assignments changes nothing physically — but it
             # lets shard_map's replication checker see that the psum over
-            # the client axes fully replicates the globals
+            # the client (x TP) axes fully replicates the globals. With TP
+            # active the TP assignments are KEPT: they are the payload
+            # placement.
+            keep = axes + (self.tp_axes if tp_on else ())
             pend_spec = jax.tree_util.tree_map(
-                lambda s: self._client_axes_only(s, axes), pend_spec)
+                lambda s: self._client_axes_only(s, keep), pend_spec)
+            if tp_on:
+                # leaf_dims come FROM the computed pend_spec, so GSPMD
+                # placement and the runtime's slicing can never disagree
+                self._tp = self._derive_tp(pend_spec)
             glob_spec = jax.tree_util.tree_map(lambda _: P(),
                                                self._init_global)
         else:
@@ -313,7 +402,8 @@ class ShardedPAOTA(FusedPAOTA):
     @staticmethod
     def _client_axes_only(spec, axes):
         """Strip mesh axes outside ``axes`` from a PartitionSpec (all such
-        axes are extent 1 in pytree mode — see the constructor guard)."""
+        axes are extent 1 in pytree mode — see the constructor guard;
+        with TP active the TP axes are part of ``axes`` and survive)."""
         def keep(entry):
             if entry is None:
                 return None
@@ -322,6 +412,33 @@ class ShardedPAOTA(FusedPAOTA):
                 return kept if kept else None
             return entry if entry in axes else None
         return P(*(keep(e) for e in spec))
+
+    def _derive_tp(self, pend_spec):
+        """Static ``TPTopology`` read off the computed pend_spec tree: for
+        each stacked leaf, the (unstacked) trailing-dim index its spec
+        assigns to the TP axes, -1 when none (TP-replicated leaf)."""
+        from repro.sharding.tp import TPTopology
+        tp_set = set(self.tp_axes)
+        dims = []
+        for sp in jax.tree_util.tree_leaves(
+                pend_spec, is_leaf=lambda s: isinstance(s, P)):
+            dim = -1
+            for i, entry in enumerate(sp):
+                names = (entry if isinstance(entry, tuple)
+                         else (entry,) if entry else ())
+                if not any(a in tp_set for a in names):
+                    continue
+                if i == 0 or (set(names) - tp_set) or dim >= 0:
+                    raise NotImplementedError(
+                        f"unsupported TP placement {sp}: the TP axes "
+                        f"{self.tp_axes} must occupy exactly one trailing "
+                        f"leaf dim, alone")
+                dim = i - 1
+            dims.append(dim)
+        return TPTopology(
+            axes=self.tp_axes,
+            extents=tuple(self.mesh.shape[a] for a in self.tp_axes),
+            shards=self.tp_shards, leaf_dims=tuple(dims))
 
     # ------------------------------------------------------------------
     # phantom-aware full-federation streams (round-0 init runs these on
@@ -507,7 +624,8 @@ class ShardedPAOTA(FusedPAOTA):
             streams = self._shard_streams(self._shard_offset())
             if grouping is None:
                 return scan_rounds(c, xs, ys, n_rounds, rcfg=self._rcfg,
-                                   streams=streams, axis_name=axes)
+                                   streams=streams, axis_name=axes,
+                                   tp=self._tp)
             return scan_windows(c, xs, ys, n_rounds // n, rcfg=self._rcfg,
                                 streams=streams, axis_name=axes,
                                 grouping=grouping)

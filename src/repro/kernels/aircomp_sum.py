@@ -258,6 +258,73 @@ def aircomp_partial_tree(stacked_leaves, bp: jnp.ndarray, axis_name=None):
     return flat
 
 
+def aircomp_partial_tree_tp(stacked_leaves, bp: jnp.ndarray, tp):
+    """The local half of ``aircomp_sum_tree_psum_tp``: this device's
+    eq.-6 superposition partial embedded at its position in the FULL
+    flattened model vector.
+
+    Each TP-sharded leaf's (1, K)x(K, D_local) contraction lands in a
+    full-trailing-shape zero buffer at this shard's TP offset (a
+    ``dynamic_update_slice`` along the leaf's TP dim, BEFORE flattening —
+    a TP-local block is not a contiguous run of the row-major flat
+    vector); TP-replicated leaves and the varsigma partial are masked to
+    the lead TP shard so the clients x TP psum counts them exactly once.
+    Returns one flat (d_total_FULL + 1,) f32 vector — psumming it over
+    the client AND TP axes performs the cross-client superposition and
+    the TP gather in the same single collective."""
+    from repro.sharding.tp import tp_linear_index, tp_mask_lead
+
+    bp32 = bp[None, :].astype(jnp.float32)
+    idx = tp_linear_index(tp)
+    parts = []
+    for leaf, dim in zip(stacked_leaves, tp.leaf_dims):
+        acc = jax.lax.dot_general(
+            bp32, leaf.reshape((leaf.shape[0], -1)).astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[0]
+        trail = leaf.shape[1:]
+        acc = acc.reshape(trail)
+        if dim >= 0:
+            full = list(trail)
+            full[dim] *= tp.shards
+            starts = [0] * len(trail)
+            starts[dim] = idx * trail[dim]
+            acc = jax.lax.dynamic_update_slice(
+                jnp.zeros(tuple(full), jnp.float32), acc, tuple(starts))
+        else:
+            acc = tp_mask_lead(acc, tp)
+        parts.append(acc.reshape(-1))
+    parts.append(tp_mask_lead(jnp.sum(bp).astype(jnp.float32), tp)[None])
+    return jnp.concatenate(parts)
+
+
+def aircomp_sum_tree_psum_tp(stacked_leaves, bp: jnp.ndarray, noise_leaves,
+                             axis_name, tp,
+                             varsigma_min: float | None = None):
+    """``aircomp_sum_tree_psum`` with the model storage TP-sharded inside
+    each client shard (``tp``: ``repro.sharding.tp.TPTopology``).
+
+    Keeps the one-psum-per-round invariant: the single model-sized psum
+    now spans the client axes AND ``tp.axes`` (one collective; the group
+    is the whole mesh), simultaneously superposing across clients and
+    gathering across TP shards — after it every device holds the full
+    received y. ``noise_leaves`` must be drawn at the FULL leaf shapes
+    (``tp_full_structs``) from the replicated round key, exactly as the
+    flat program draws them, and join once after the collective — so the
+    AWGN realization is a function of the MODEL, not the TP layout, and
+    every TP extent consumes the same total noise.
+
+    Returns (list of FULL-shape f32 aggregate leaves, varsigma), both
+    replicated over every mesh axis."""
+    from repro.sharding.tp import tp_full_structs
+
+    flat = aircomp_partial_tree_tp(stacked_leaves, bp, tp)
+    axes = axis_name if isinstance(axis_name, (tuple, list)) else (axis_name,)
+    flat = jax.lax.psum(flat, tuple(axes) + tuple(tp.axes))
+    return aircomp_finalize_tree(flat, tp_full_structs(stacked_leaves, tp),
+                                 noise_leaves, varsigma_min=varsigma_min)
+
+
 # ---------------------------------------------------------------------------
 # gather-superpose-decompress: AirComp over the (m, s) compressed cohort
 # plane without ever materializing the dense (m, d) payload

@@ -22,7 +22,8 @@ from repro.kernels.aircomp_sum import (aircomp_sum_pallas,
                                        superpose_normalize_pallas)
 from repro.kernels.cosine_sim import cosine_partials_pallas
 from repro.kernels.round_stats import (compressed_round_stats,
-                                       round_stats_jnp, round_stats_pallas)
+                                       round_stats_jnp, round_stats_pallas,
+                                       round_stats_tp)
 from repro.kernels.swa_attention import swa_attention_pallas
 
 
@@ -46,14 +47,22 @@ def kernels_compiled() -> bool:
     return not interpret_mode()
 
 
-def round_stats(deltas, g, payload=None):
+def round_stats(deltas, g, payload=None, tp=None):
     """Fused eq.-25 round stats over a params pytree (raveled = single
     (K, D) leaf): ``(dots, dn2, pn2 | None, gn2)`` in one sweep.
 
     Compiled Pallas kernel per leaf on TPU; the chunked-jnp twin
     elsewhere (same contract, same f32 accumulation — the interpret-mode
     kernel stays a test-only oracle check, per the interpret_mode
-    policy)."""
+    policy).
+
+    ``tp``: intra-client ``TPTopology`` under ``jax.shard_map`` — the
+    sweep then runs on the TP-local leaf blocks against a TP-sliced
+    global direction and reduces the sharded partials once over
+    ``tp.axes`` (see ``kernels.round_stats.round_stats_tp``)."""
+    if tp is not None:
+        return round_stats_tp(deltas, g, payload, tp,
+                              lambda d, gg, p: round_stats(d, gg, p))
     if not kernels_compiled():
         return round_stats_jnp(deltas, g, payload)
     d_leaves = jax.tree_util.tree_leaves(deltas)

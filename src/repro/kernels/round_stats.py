@@ -295,3 +295,58 @@ def compressed_round_stats(values, idx, resid, resid_idx, g,
         dots = dots + jnp.einsum("ms,ms->m", r32, g32[resid_idx])
         dn2 = dn2 + jnp.einsum("ms,ms->m", r32, r32)
     return dots, dn2, pn2, jnp.sum(g32 * g32)
+
+
+def round_stats_tp(deltas, g, payload, tp, stats_fn):
+    """Intra-client-TP round stats: one psum over the TP axes.
+
+    The stacked leaves of ``deltas``/``payload`` are this device's
+    TP-local blocks (trailing dim ``tp.leaf_dims[i]`` holds 1/``shards``
+    of the model) while ``g`` is the full replicated global direction —
+    so the sweep slices ``g`` down to the matching block per sharded
+    leaf, runs ``stats_fn`` (the backend-dispatched dense sweep) over the
+    sharded and TP-replicated leaf groups separately, and reduces ONE
+    concatenated ``[dots | dn2 (| pn2) | gn2]`` vector over ``tp.axes``.
+    TP-replicated leaves (no dividing trailing dim) are accumulated
+    OUTSIDE that psum so they count exactly once. With every leaf in one
+    group the other contributes exact zeros — same totals either way."""
+    from repro.sharding.tp import tp_slice
+
+    d_leaves = jax.tree_util.tree_leaves(deltas)
+    g_leaves = jax.tree_util.tree_leaves(g)
+    have_p = payload is not None
+    p_leaves = (jax.tree_util.tree_leaves(payload) if have_p
+                else [None] * len(d_leaves))
+    k = d_leaves[0].shape[0]
+
+    sh = ([], [], [])   # sharded leaves: (deltas, g-local, payload)
+    rep = ([], [], [])  # TP-replicated leaves
+    for dl, gl, plf, dim in zip(d_leaves, g_leaves, p_leaves, tp.leaf_dims):
+        dst = sh if dim >= 0 else rep
+        dst[0].append(dl)
+        dst[1].append(tp_slice(gl, dim, tp) if dim >= 0 else gl)
+        dst[2].append(plf)
+
+    def run(group):
+        return stats_fn(group[0], group[1], group[2] if have_p else None)
+
+    if sh[0]:
+        dots, dn2, pn2, gn2 = run(sh)
+    else:
+        dots = dn2 = jnp.zeros((k,), jnp.float32)
+        pn2 = jnp.zeros((k,), jnp.float32) if have_p else None
+        gn2 = jnp.float32(0.0)
+    parts = [dots, dn2] + ([pn2] if have_p else []) + [jnp.reshape(gn2, (1,))]
+    flat = jax.lax.psum(jnp.concatenate(parts), tp.axes)
+    dots, dn2 = flat[:k], flat[k:2 * k]
+    off = 2 * k
+    if have_p:
+        pn2 = flat[off:off + k]
+        off += k
+    gn2 = flat[off]
+    if rep[0]:
+        r_dots, r_dn2, r_pn2, r_gn2 = run(rep)
+        dots, dn2, gn2 = dots + r_dots, dn2 + r_dn2, gn2 + r_gn2
+        if have_p:
+            pn2 = pn2 + r_pn2
+    return dots, dn2, (pn2 if have_p else None), gn2

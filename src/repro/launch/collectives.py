@@ -67,29 +67,48 @@ def iter_allreduces(hlo_text: str) -> Iterator[Tuple[int, List[List[int]]]]:
         yield nelems, groups
 
 
+def axis_crossing_allreduce_count(hlo_text: str,
+                                  mesh_shape: Tuple[int, ...],
+                                  dims: Tuple[int, ...],
+                                  min_elements: int = 1,
+                                  max_elements: int | None = None) -> int:
+    """Count all-reduces whose replica groups SPAN the mesh dims ``dims``
+    and whose payload size is in ``[min_elements, max_elements]``.
+
+    ``mesh_shape`` is the mesh's extent tuple in axis-name order, ``dims``
+    the positions of the axes of interest in it (pod axes for the grouped
+    invariant, client axes for the cross-client superposition, the TP
+    axis for the intra-client-TP reductions). An op "spans" the dims when
+    some replica group holds two devices with different coordinates at
+    them. Empty replica groups mean ALL devices in one group — spanning
+    whenever any dim in ``dims`` has extent > 1."""
+    def coord_of(p: int) -> Tuple[int, ...]:
+        coords = np.unravel_index(p, mesh_shape)
+        return tuple(int(coords[d]) for d in dims)
+
+    n_at = int(np.prod([mesh_shape[d] for d in dims]))
+    count = 0
+    for nelems, groups in iter_allreduces(hlo_text):
+        if nelems < min_elements:
+            continue
+        if max_elements is not None and nelems > max_elements:
+            continue
+        if not groups:
+            crosses = n_at > 1
+        else:
+            crosses = any(len({coord_of(p) for p in g}) > 1 for g in groups)
+        if crosses:
+            count += 1
+    return count
+
+
 def cross_pod_allreduce_count(hlo_text: str, mesh_shape: Tuple[int, ...],
                               pod_dims: Tuple[int, ...],
                               min_elements: int = 8192) -> int:
     """Count all-reduces whose replica groups SPAN pods and whose payload
     is at least ``min_elements`` elements (model-sized; the default sits
     above the water-filling grid of 4096 and the scalar metrics, below
-    any federated model). ``mesh_shape`` is the mesh's extent tuple in
-    axis-name order, ``pod_dims`` the positions of the pod axes in it.
-    Empty replica groups mean ALL devices in one group — cross-pod
-    whenever any pod dim has extent > 1."""
-    def pod_of(p: int) -> Tuple[int, ...]:
-        coords = np.unravel_index(p, mesh_shape)
-        return tuple(int(coords[d]) for d in pod_dims)
-
-    n_pods = int(np.prod([mesh_shape[d] for d in pod_dims]))
-    count = 0
-    for nelems, groups in iter_allreduces(hlo_text):
-        if nelems < min_elements:
-            continue
-        if not groups:
-            crosses = n_pods > 1
-        else:
-            crosses = any(len({pod_of(p) for p in g}) > 1 for g in groups)
-        if crosses:
-            count += 1
-    return count
+    any federated model). The pod-axes instance of
+    ``axis_crossing_allreduce_count``."""
+    return axis_crossing_allreduce_count(hlo_text, mesh_shape, pod_dims,
+                                         min_elements=min_elements)

@@ -42,6 +42,16 @@ to (m, s) compressed planes with per-client error-feedback residuals
 (``--no-error-feedback`` drops them), superposed by the fused
 gather-superpose-decompress kernel — the dense (m, d) plane never
 materializes (EXPERIMENTS.md §Compressed cohort payloads).
+
+``--tp T`` (sharded + ``--params-mode pytree``) turns on intra-client
+tensor parallelism: the mesh becomes ("pod", "data", "tp") with the tp
+extent taken off the client axis, and every client replica's stacked
+payload leaves TP-shard their model dims over it (per-device model-plane
+carry ~1/T). The round's tree reductions psum TP partials, the AWGN
+realization is drawn at full leaf shapes so every TP layout consumes the
+same total noise, and the compiled program keeps exactly ONE cross-client
+model-sized psum — it gathers the TP blocks in the same op
+(EXPERIMENTS.md §Intra-client TP).
 """
 from examples.fl_noniid_mnist import main
 

@@ -45,20 +45,25 @@ def make_cpu_mesh(*, data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
-def make_pod_mesh(*, pods: int = 2, data: int = 256):
-    """("pod", "data") client mesh for grouped aggregation: ``pods``
-    semi-async aggregation groups of ``data`` single-chip client shards
-    each (the 2x256 = 512-chip multi-pod topology with the model axis
-    flattened into clients). Same forced-host-device contract as
-    ``make_cpu_mesh``: on CPU set XLA_FLAGS before jax initializes."""
-    n = pods * data
+def make_pod_mesh(*, pods: int = 2, data: int = 256, tp: int = 1):
+    """("pod", "data"[, "tp"]) client mesh: ``pods`` semi-async
+    aggregation groups of ``data`` client shards each. ``tp > 1`` appends
+    an intra-client tensor-parallel axis — every client replica's model
+    storage spans ``tp`` chips (``ShardedPAOTA`` TP-shards the stacked
+    payload leaves over it; see EXPERIMENTS.md §Intra-client TP).
+    ``tp=1`` returns the historical two-axis ("pod", "data") mesh
+    unchanged. Same forced-host-device contract as ``make_cpu_mesh``:
+    on CPU set XLA_FLAGS before jax initializes."""
+    n = pods * data * tp
     if len(jax.devices()) < n:
         raise RuntimeError(
             f"need {n} devices, have {len(jax.devices())}; on CPU force "
             f"virtual devices with XLA_FLAGS="
             f"--xla_force_host_platform_device_count={n} before jax "
             f"initializes (set it in the environment, not after import)")
-    return jax.make_mesh((pods, data), ("pod", "data"))
+    if tp == 1:
+        return jax.make_mesh((pods, data), ("pod", "data"))
+    return jax.make_mesh((pods, data, tp), ("pod", "data", "tp"))
 
 
 def make_client_mesh(shards: int | None = None):

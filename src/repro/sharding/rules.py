@@ -92,6 +92,12 @@ def _base_spec(keys: Tuple[str, ...], shape: Tuple[int, ...],
         if parent == "down":                # (ff, d)
             return pad((tp, None))
     # norms, projector/frontend, mask_emb, biases: replicated
+    if cfg is None and tp is not None and axis_sizes.get(tp, 1) > 1:
+        # structureless pytrees under an active TP axis: shard the LAST
+        # tp-divisible trailing dim; nothing divides -> replicated leaf
+        for i in range(ndim - 1, -1, -1):
+            if shape[i] > 1 and shape[i] % axis_sizes[tp] == 0:
+                return pad((None,) * i + (tp,) + (None,) * (ndim - 1 - i))
     return pad(())
 
 
@@ -125,16 +131,24 @@ def param_specs(params_shape, cfg: Optional[ModelConfig], mesh,
 
 
 def stack_client_specs(params_shape, cfg: Optional[ModelConfig], mesh,
-                       client_axes, ep_axis: Optional[str] = None):
+                       client_axes, ep_axis: Optional[str] = None,
+                       tp_axis: Optional[str] = None):
     """Specs for client-stacked params (K, ...). Inside a client replica,
-    TP over 'model'; EP over `ep_axis` only if it's not a client axis.
-    ``cfg=None``: leading client axes only (see ``param_specs``)."""
+    TP over ``tp_axis`` (default: the mesh's "tp" axis when present and
+    not a client axis, else the historical "model"); EP over `ep_axis`
+    only if it's not a client axis. ``cfg=None``: leading client axes
+    plus, under an active TP axis, the last tp-divisible trailing dim of
+    each leaf (see ``param_specs``)."""
     ep = ep_axis
     if ep is None:
         ep = "data" if ("data" in mesh.axis_names
                         and "data" not in client_axes) else None
+    tp = tp_axis
+    if tp is None:
+        tp = "tp" if ("tp" in mesh.axis_names
+                      and "tp" not in client_axes) else "model"
     return param_specs(params_shape, cfg, mesh, ep_axis=ep,
-                       stack_axes=tuple(client_axes))
+                       stack_axes=tuple(client_axes), tp_axis=tp)
 
 
 def batch_specs(batch_shape, dp_axes: Tuple[str, ...], lead_axes: Tuple = ()):

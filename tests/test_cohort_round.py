@@ -71,12 +71,13 @@ def test_full_cohort_matches_dense(params_mode, transmit):
         assert a["mean_staleness"] == pytest.approx(b["mean_staleness"],
                                                     abs=1e-6)
         # the slot order permutes the water-filling solver's reductions;
-        # its discrete grid search can pick an adjacent cell near the flat
-        # optimum, shifting the (near-tied) betas — percent-level varsigma
-        # wiggle with a near-identical objective, NOT a semantic drift
-        assert a["varsigma"] == pytest.approx(b["varsigma"], rel=2e-2)
+        # the tie-broken grid argmax (lowest index within WATERFILL_TIE_RTOL
+        # of the optimum) keeps the chosen cell stable under float
+        # regrouping, so only reduction-order noise remains in the
+        # beta sum (formerly rel=2e-2 when near-tied cells could flip)
+        assert a["varsigma"] == pytest.approx(b["varsigma"], rel=1e-3)
     np.testing.assert_allclose(dense.global_vec, coh.global_vec,
-                               rtol=1e-3, atol=2e-4)
+                               rtol=1e-4, atol=1e-5)
 
 
 def test_full_cohort_matches_dense_bf16():
@@ -165,12 +166,12 @@ def test_step_invariant_under_slot_permutation(seed):
     s1 = set(np.asarray(c1.slot_client)[np.asarray(c1.slot_live)].tolist())
     s2 = set(np.asarray(c2.slot_client)[np.asarray(c2.slot_live)].tolist())
     assert s1 == s2
-    # global model: same math, permuted reduction order (the water-filling
-    # grid search may flip a near-tied cell — see the tolerance note in
-    # test_full_cohort_matches_dense)
+    # global model: same math, permuted reduction order (the tie-broken
+    # water-filling grid argmax holds the chosen cell stable — see the
+    # tolerance note in test_full_cohort_matches_dense)
     np.testing.assert_allclose(np.asarray(c1.global_vec),
                                np.asarray(c2.global_vec),
-                               rtol=1e-3, atol=2e-4)
+                               rtol=1e-4, atol=1e-5)
     assert float(o1["n_participants"][0]) == \
         pytest.approx(float(o2["n_participants"][0]))
 
@@ -195,7 +196,7 @@ def test_sharded_full_cohort_matches_fused_dense():
     for a, b in zip(hd, hs):
         assert a["n_participants"] == b["n_participants"]
     np.testing.assert_allclose(dense.global_vec, sh.global_vec,
-                               rtol=1e-3, atol=2e-4)
+                               rtol=1e-4, atol=1e-5)
 
 
 @pytest.mark.multidevice

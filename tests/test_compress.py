@@ -253,6 +253,6 @@ def test_ef_handoff_invariant_under_slot_permutation(seed):
     assert s1 == s2
     np.testing.assert_allclose(np.asarray(c1.global_vec),
                                np.asarray(c2.global_vec),
-                               rtol=1e-3, atol=2e-4)
+                               rtol=1e-4, atol=1e-5)
     assert float(o1["n_participants"][0]) == \
         pytest.approx(float(o2["n_participants"][0]))

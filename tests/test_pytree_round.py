@@ -186,11 +186,11 @@ def test_phantom_pad_invariance(data, client_mesh_8, params_mode):
 
 @pytest.mark.multidevice
 def test_pytree_sharded_rejects_nontrivial_model_axis(data):
-    """Intra-client TP is not wired into the tree reductions yet: a mesh
-    whose non-client axes have extent > 1 must refuse pytree mode, and the
-    refusal must NAME the offending axis with its extent and point at the
-    raveled-mode workaround (the error is the only breadcrumb a launcher
-    user gets)."""
+    """A mesh whose non-client, non-TP axes have extent > 1 must refuse
+    pytree mode, and the refusal must NAME the offending axis with its
+    extent and point at every workaround — tp_axes (intra-client TP),
+    raveled mode, or widening client_axes (the error is the only
+    breadcrumb a launcher user gets)."""
     from tests.conftest import require_host_devices
     require_host_devices(8)
     from repro.launch.mesh import make_cpu_mesh
@@ -200,6 +200,7 @@ def test_pytree_sharded_rejects_nontrivial_model_axis(data):
                      params_mode="pytree")
     msg = str(exc.value)
     assert "'model' (extent 2)" in msg
+    assert "tp_axes" in msg
     assert "params_mode='raveled'" in msg
     assert "client_axes" in msg
 

@@ -1,0 +1,239 @@
+"""Intra-client tensor parallelism under the sharded round.
+
+The ("pod", "data", "tp") mesh completes the pods x clients x TP
+topology: client shards hold (K_local, ...) stacked leaves whose model
+dims are additionally TP-sharded over the "tp" axis, while the round's
+tree reductions psum TP partials back together. Pinned here:
+
+* TP extent 1 is BIT-IDENTICAL to the flat client-mesh program — any
+  extent-1 tp axis must trace the exact PR-8 round, op for op;
+* TP extent > 1 is allclose to the fused pytree reference (the single
+  cross-client psum now also gathers the TP blocks, and the AWGN
+  realization is drawn at full leaf shapes so every TP layout consumes
+  the same total noise);
+* the compiled HLO shows exactly ONE cross-client model-sized
+  all-reduce — TP adds small tp-spanning stats psums, never a second
+  model-plane collective;
+* unsupported combos (raveled/cohort/grouped/compress x TP) refuse with
+  messages naming both offending knobs and the nearest supported
+  configuration;
+* the minicpm-2b-reduced transformer client federates on the forced
+  (1, 2, 4) mesh with its attention/MLP leaves genuinely TP-sharded.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import ClientData, build_federation
+from repro.data.synthetic import make_mnist_like
+from repro.fl import FLClient, FusedPAOTA, PAOTAConfig, ShardedPAOTA
+from repro.models.mlp import init_mlp_params, mlp_loss
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y, _, _ = make_mnist_like(n_train=2000, n_test=10)
+    parts = partition_noniid(y, n_clients=K, seed=0)
+    return x, y, parts
+
+
+def _clients(data):
+    x, y, parts = data
+    return [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+            for d in build_federation(x, y, parts)]
+
+
+def _params(hidden=128):
+    # hidden=128: every hidden dim divides tp extents 2 and 4, so the
+    # placement rules TP-shard the big leaves while the 10-class output
+    # biases stay replicated — both reduction paths exercised
+    return init_mlp_params(jax.random.PRNGKey(0), hidden=hidden)
+
+
+def _cfg(k=K, **kw):
+    return (ChannelConfig(), SchedulerConfig(n_clients=k, seed=1, **kw),
+            PAOTAConfig())
+
+
+def _tp_mesh(tp, data_shards=None):
+    from tests.conftest import require_host_devices
+    require_host_devices(8)
+    from repro.launch.mesh import make_pod_mesh
+    return make_pod_mesh(pods=1, data=data_shards or 8 // tp, tp=tp)
+
+
+# ---------------------------------------------------------------------------
+# extent-1 bit-identity and TP-vs-flat parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_tp_extent1_bit_identity(data, client_mesh_8):
+    """A ("pod","data","tp") mesh with tp extent 1 skips every TP branch
+    at trace time: the program is the historical flat round, draw for
+    draw and bit for bit."""
+    flat = ShardedPAOTA(_params(10), _clients(data), *_cfg(),
+                        mesh=client_mesh_8, params_mode="pytree")
+    tp1 = ShardedPAOTA(_params(10), _clients(data), *_cfg(),
+                       mesh=_tp_mesh(1, data_shards=8),
+                       params_mode="pytree")
+    assert tp1._tp is None
+    for rf, rt in zip(flat.advance(4), tp1.advance(4)):
+        assert rf == rt
+    np.testing.assert_array_equal(flat.global_vec, tp1.global_vec)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("tp", [2, 4])
+def test_tp_matches_fused_pytree(data, tp):
+    """TP-sharded rounds reproduce the fused single-device pytree
+    trajectory: the clients x tp psum superposes AND gathers, and the
+    full-shape AWGN draw keeps the noise realization layout-invariant."""
+    ref = FusedPAOTA(_params(), _clients(data), *_cfg(),
+                     params_mode="pytree")
+    srv = ShardedPAOTA(_params(), _clients(data), *_cfg(),
+                       mesh=_tp_mesh(tp), params_mode="pytree")
+    assert srv._tp is not None and srv._tp.shards == tp
+    assert any(d >= 0 for d in srv._tp.leaf_dims)
+    if tp == 4:
+        # the 10-wide output leaves cannot divide 4 and stay replicated:
+        # both reduction paths (TP-sharded + TP-replicated) exercised
+        assert any(d < 0 for d in srv._tp.leaf_dims)
+    for rf, rt in zip(ref.advance(4), srv.advance(4)):
+        assert rf["n_participants"] == rt["n_participants"]
+        assert rf["time"] == rt["time"]
+        assert rf["varsigma"] == pytest.approx(rt["varsigma"], rel=1e-5)
+    np.testing.assert_allclose(ref.global_vec, srv.global_vec,
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.multidevice
+def test_tp_noise_total_is_layout_invariant(data):
+    """Same seed, different TP layouts: identical trajectories. The AWGN
+    split is defined on FULL leaf shapes from the replicated round key,
+    so (1,4,2) and (1,2,4) consume the very same realization."""
+    a = ShardedPAOTA(_params(), _clients(data), *_cfg(),
+                     mesh=_tp_mesh(2), params_mode="pytree")
+    b = ShardedPAOTA(_params(), _clients(data), *_cfg(),
+                     mesh=_tp_mesh(4), params_mode="pytree")
+    for ra, rb in zip(a.advance(3), b.advance(3)):
+        assert ra["n_participants"] == rb["n_participants"]
+        assert ra["varsigma"] == pytest.approx(rb["varsigma"], rel=1e-5)
+    np.testing.assert_allclose(a.global_vec, b.global_vec,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compiled-HLO collective structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_tp_hlo_single_model_sized_psum(data):
+    """The structural contract: ONE cross-client model-sized all-reduce
+    per round (it spans the tp axis too — superpose + gather in the same
+    op), plus small tp-spanning stats psums; never a second model-plane
+    collective."""
+    from repro.launch.collectives import axis_crossing_allreduce_count
+    srv = ShardedPAOTA(_params(), _clients(data), *_cfg(),
+                       mesh=_tp_mesh(4), params_mode="pytree")
+    hlo = srv.compiled_scan_hlo(1)
+    shape = tuple(srv.mesh.shape[a] for a in srv.mesh.axis_names)
+    # d+1 = 118283 for the hidden-128 MLP; the floor sits above the
+    # 4096-wide water-filling grid psum and every scalar metric
+    floor = 4097
+    assert axis_crossing_allreduce_count(hlo, shape, (0, 1),
+                                         min_elements=floor) == 1
+    assert axis_crossing_allreduce_count(hlo, shape, (2,),
+                                         min_elements=floor) == 1
+    # the TP-aware stats sweep psums its [dots|dn2|gn2] concat over tp
+    assert axis_crossing_allreduce_count(hlo, shape, (2,),
+                                         max_elements=4096) >= 1
+
+
+# ---------------------------------------------------------------------------
+# unsupported-combo refusals
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+def test_tp_refusals_name_both_knobs(data):
+    """Every unsupported combination refuses with a message naming BOTH
+    offending knobs and pointing at the nearest supported configuration
+    (the error is the only breadcrumb a launcher user gets)."""
+    mesh = _tp_mesh(4)
+    cases = [
+        (dict(params_mode="raveled"),
+         ["params_mode='raveled'", "params_mode='pytree'"]),
+        (dict(params_mode="pytree", cohort_size=4),
+         ["cohort_size=4", "cohort_size=None"]),
+        (dict(params_mode="pytree", group_period=2),
+         ["group_period=2", "group_period=0"]),
+        (dict(params_mode="pytree", compress="topk", compress_ratio=0.25),
+         ["compress='topk'", "compress=None"]),
+    ]
+    for kw, needles in cases:
+        with pytest.raises(NotImplementedError) as exc:
+            ShardedPAOTA(_params(), _clients(data), *_cfg(),
+                         mesh=mesh, **kw)
+        msg = str(exc.value)
+        for needle in needles:
+            assert needle in msg, (kw, needle, msg)
+        assert "nearest supported" in msg, (kw, msg)
+        assert "tp" in msg.lower(), (kw, msg)
+
+
+@pytest.mark.multidevice
+def test_tp_axes_must_be_nonclient_mesh_axes(data):
+    """Explicit tp_axes naming a client axis (or a non-mesh axis) is a
+    config error, not a silent fallback."""
+    mesh = _tp_mesh(4)
+    with pytest.raises(ValueError, match="non-client mesh axes"):
+        ShardedPAOTA(_params(), _clients(data), *_cfg(), mesh=mesh,
+                     params_mode="pytree", tp_axes=("data",))
+    with pytest.raises(ValueError, match="non-client mesh axes"):
+        ShardedPAOTA(_params(), _clients(data), *_cfg(), mesh=mesh,
+                     params_mode="pytree", tp_axes=("nope",))
+
+
+# ---------------------------------------------------------------------------
+# transformer client under real TP placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.multidevice
+@pytest.mark.slow
+def test_transformer_client_tp_round():
+    """Acceptance: the minicpm-2b-reduced transformer federation
+    completes sharded PAOTA rounds on the forced (1, 2, 4) mesh with its
+    attention/MLP leaves TP-sharded by the name-based placement rules
+    (every REDUCED model dim divides 4)."""
+    from repro.configs.minicpm_2b import REDUCED as cfg
+    from repro.models.transformer import init_model, loss_fn
+
+    k, n, seq = 8, 8, 16
+    rng = np.random.default_rng(0)
+
+    def tloss(p, batch):
+        return loss_fn(p, {"tokens": batch["x"]}, cfg)[0]
+
+    clients = [FLClient(ClientData(
+        rng.integers(0, cfg.vocab_size, (n, seq)).astype(np.int32),
+        np.zeros(n, np.int32), i), tloss, batch_size=4, lr=0.01,
+        local_steps=2) for i in range(k)]
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    srv = ShardedPAOTA(params, clients, ChannelConfig(),
+                       SchedulerConfig(n_clients=k, seed=1), PAOTAConfig(),
+                       mesh=_tp_mesh(4), params_mode="pytree",
+                       model_cfg=cfg)
+    assert srv._tp is not None and srv._tp.shards == 4
+    n_sharded = sum(1 for d in srv._tp.leaf_dims if d >= 0)
+    assert n_sharded >= 8          # wq/wk/wv/wo + mlp per layer at least
+    rows = srv.advance(3)
+    assert any(r["n_participants"] > 0 for r in rows)
+    g = srv.global_params()
+    assert jax.tree_util.tree_structure(g) \
+        == jax.tree_util.tree_structure(params)
+    assert all(bool(jnp.isfinite(l).all())
+               for l in jax.tree_util.tree_leaves(g))
