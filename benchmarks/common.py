@@ -109,6 +109,23 @@ class BenchSetting:
                                  # stacked payload leaves TP-shard over
                                  # it (per-device carry ~1/tp; one
                                  # clients x tp psum per round)
+    faults: str = ""             # fused/sharded: fault-injection spec,
+                                 # comma-separated kind:value pairs parsed
+                                 # by parse_faults() — e.g.
+                                 # "nan:0.05,start:1" or
+                                 # "byz:0.1,scale:-50,fade:0.02"
+    screen: bool = False         # fused/sharded: mask non-finite uploads
+                                 # out of the superposition (containment)
+    screen_max_norm: float = 0.0 # screening norm fence (0 = finite-only)
+    divergence_factor: float = 0.0  # post-update rollback detector
+                                 # (0 = off)
+    checkpoint_every: int = 0    # fused/sharded: snapshot the full round
+                                 # carry every N rounds into
+                                 # checkpoint_dir (0 = off)
+    checkpoint_dir: str = ""
+    resume: str = ""             # fused/sharded: checkpoint path to
+                                 # restore before training — the resumed
+                                 # run continues the killed one bit-exactly
 
     @classmethod
     def from_env(cls, **kw):
@@ -116,6 +133,48 @@ class BenchSetting:
         if os.environ.get("REPRO_BENCH_FULL") == "1":
             s.n_clients, s.n_rounds, s.n_select = 100, 120, 50
         return s
+
+
+# fault-spec keys -> FaultConfig fields ("inf" flips nan_mode, not a field)
+_FAULT_KEYS = {"nan": ("nan_frac", float), "inf": ("nan_frac", float),
+               "byz": ("byzantine_frac", float),
+               "scale": ("byzantine_scale", float),
+               "fade": ("deep_fade_frac", float),
+               "gain": ("deep_fade_gain", float),
+               "start": ("start", int), "stop": ("stop", int),
+               "pods": ("pod_blackout", None),
+               "bstart": ("blackout_start", int),
+               "bstop": ("blackout_stop", int)}
+
+
+def parse_faults(spec: str):
+    """CLI fault spec -> ``FaultConfig``: comma-separated ``kind:value``
+    pairs — ``nan:0.05`` (NaN payload fraction; ``inf:`` for +Inf rows),
+    ``byz:0.1`` / ``scale:-50`` (Byzantine fraction / delta scale),
+    ``fade:0.02`` / ``gain:1e-4`` (deep-fade fraction / gain),
+    ``start:`` / ``stop:`` (active round window), ``pods:0|2`` /
+    ``bstart:`` / ``bstop:`` (pod-blackout indices and window, grouped
+    sharded mode). Empty/None spec -> None (no FaultConfig at all)."""
+    from repro.core.scheduler import FaultConfig
+    if not spec:
+        return None
+    kw = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, val = part.partition(":")
+        if kind not in _FAULT_KEYS:
+            raise ValueError(f"unknown fault kind {kind!r} in {spec!r} "
+                             f"(expected one of {sorted(_FAULT_KEYS)})")
+        field, cast = _FAULT_KEYS[kind]
+        if kind == "pods":
+            kw[field] = tuple(int(p) for p in val.split("|") if p)
+        else:
+            kw[field] = cast(val)
+        if kind == "inf":
+            kw["nan_mode"] = "inf"
+    return FaultConfig(**kw)
 
 
 def build_world(s: BenchSetting):
@@ -146,6 +205,15 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
     # "fused"/"sharded" are PAOTA-only modes; the sync baselines use the
     # batched engine under them so the comparison stays apples-to-apples
     engine = "batched" if s.engine in ("fused", "sharded") else s.engine
+    fault_tol = (s.faults or s.screen or s.divergence_factor
+                 or s.checkpoint_every or s.resume)
+    if fault_tol and not (name == "paota"
+                          and s.engine in ("fused", "sharded")):
+        if name != "paota":
+            return []       # fault-tolerance sweeps are PAOTA-only
+        raise ValueError(
+            "faults/screen/divergence/checkpoint knobs live on the "
+            "fused/sharded drivers; pass engine='fused' or 'sharded'")
     if name == "paota":
         if s.engine in ("fused", "sharded"):
             # solver is passed through: the on-device drivers raise on
@@ -173,11 +241,24 @@ def run_algorithm(name: str, s: BenchSetting, clients, params, data,
                 kw.update(compress=s.compress,
                           compress_ratio=s.compress_ratio,
                           error_feedback=s.error_feedback)
+            if s.faults:
+                kw["faults"] = parse_faults(s.faults)
+            if s.screen:
+                kw.update(screen=True, screen_max_norm=s.screen_max_norm)
+            if s.divergence_factor:
+                kw["divergence_factor"] = s.divergence_factor
+            if s.checkpoint_every:
+                kw.update(checkpoint_every=s.checkpoint_every,
+                          checkpoint_dir=s.checkpoint_dir
+                          or os.path.join(OUT_DIR, "checkpoints"))
             srv = cls(params, clients, chan, sched,
                       PAOTAConfig(solver=s.solver, seed=s.seed,
                                   transmit=transmit),
                       params_mode=s.params_mode,
                       pending_dtype=s.pending_dtype, **kw)
+            if s.resume:
+                done = srv.restore_checkpoint(s.resume)
+                print(f"resumed {name} from {s.resume} (round {done})")
         else:
             srv = PAOTAServer(params, clients, chan, sched,
                               PAOTAConfig(solver=s.solver, seed=s.seed,

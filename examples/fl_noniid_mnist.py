@@ -74,6 +74,38 @@ def main():
                     help="drop the error-feedback residual planes (plain "
                          "sparsification; frees the per-client (K, s) "
                          "parked rows)")
+    ap.add_argument("--faults", default="",
+                    help="fused/sharded PAOTA only: fault-injection spec, "
+                         "comma-separated kind:value pairs — nan:F / inf:F "
+                         "(NaN/+Inf payload fraction), byz:F + scale:S "
+                         "(Byzantine deltas), fade:F + gain:G (deep-fade "
+                         "channel outliers), start:R / stop:R (active "
+                         "window), pods:0|2 + bstart:R + bstop:R (pod "
+                         "blackout, grouped sharded mode). E.g. "
+                         "'nan:0.05,start:1'")
+    ap.add_argument("--screen", action="store_true",
+                    help="mask non-finite uploads out of the AirComp "
+                         "superposition (per-row containment; the round "
+                         "still runs ONE cross-client psum)")
+    ap.add_argument("--screen-max-norm", type=float, default=0.0,
+                    help="with --screen: also screen rows with payload "
+                         "norm beyond this fence (0 = finite-only)")
+    ap.add_argument("--divergence-factor", type=float, default=0.0,
+                    help="roll the global back to the last-good slot when "
+                         "a post-update norm jump exceeds this factor "
+                         "(0 = detector off)")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="fused/sharded PAOTA: snapshot the FULL round "
+                         "carry every N rounds (bit-exact resume via "
+                         "--resume; 0 = off)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="where --checkpoint-every snapshots go (default "
+                         "<bench out dir>/checkpoints)")
+    ap.add_argument("--resume", default="",
+                    help="checkpoint path to restore before training: the "
+                         "resumed PAOTA run continues the killed one "
+                         "bit-for-bit (counter RNG replays the identical "
+                         "streams), then runs --rounds more rounds")
     ap.add_argument("--out", default="experiments/bench/fl_noniid.csv")
     args = ap.parse_args()
 
@@ -87,11 +119,19 @@ def main():
                               compress=args.compress,
                               compress_ratio=args.compress_ratio,
                               error_feedback=not args.no_error_feedback,
-                              tp=args.tp)
+                              tp=args.tp, faults=args.faults,
+                              screen=args.screen,
+                              screen_max_norm=args.screen_max_norm,
+                              divergence_factor=args.divergence_factor,
+                              checkpoint_every=args.checkpoint_every,
+                              checkpoint_dir=args.checkpoint_dir,
+                              resume=args.resume)
     clients, params, data = build_world(s)
     all_rows = []
     for algo in ("paota", "local_sgd", "cotaf"):
         rows = run_algorithm(algo, s, clients, params, data)
+        if not rows:
+            continue        # fault-tolerance sweeps skip the baselines
         all_rows.extend(rows)
         tta = time_to_accuracy(rows)
         print(f"\n=== {algo} === final acc {rows[-1]['accuracy']:.3f} "

@@ -8,6 +8,8 @@
 #                            K=16; >2x wall-clock regressions fail)
 #                          + cohort-round smoke (dense vs active-cohort
 #                            synthetic pair at K=1e3, carry-bytes tracked)
+#                          + fault-round smoke (screening-overhead trio at
+#                            K=1e3; the faulty row must engage the screen)
 #   CI_FULL=1 scripts/ci.sh   full suite (nightly-style) + sharded
 #                          benchmark smoke (8 forced devices, K=16)
 #   CI_BENCH=1 scripts/ci.sh  also run the engine benchmark after tests
@@ -80,6 +82,25 @@ assert any("synth_cohort_" in n for n in names), names
 assert any("_rm16" in n for n in names), names
 assert any("_rm16_int8" in n for n in names), names
 assert all("carry_bytes=" in r["derived"] for r in art["rows"]), art["rows"]
+print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
+EOF
+
+# fault-round smoke: unguarded vs screen-on-clean vs faulty-under-screen
+# synthetic trio at K=1e3 — the screening overhead is the tracked series,
+# and the faulty row must show the screen actually engaging. Gated by the
+# >2x diff below.
+rm -f "$BENCH_OUT/BENCH_fault_round_smoke.json"
+python -m benchmarks.fault_round_bench smoke
+python - "$BENCH_OUT" <<'EOF'
+import json, sys
+art = json.load(open(f"{sys.argv[1]}/BENCH_fault_round_smoke.json"))
+names = [r["name"] for r in art["rows"]]
+assert any("synth_baseline_dense_k1000" in n for n in names), names
+assert any("synth_screen_dense_k1000" in n for n in names), names
+faulty = [r for r in art["rows"] if "faulty_screened" in r["name"]]
+assert faulty and all(
+    float(r["derived"].split("screened_per_round=")[1]) > 0
+    for r in faulty), faulty
 print(f"artifact ok: {art['name']} ({len(art['rows'])} rows)")
 EOF
 

@@ -1,6 +1,18 @@
 """npz-based distributed-agnostic checkpointing: the pytree is flattened to
 path-keyed arrays; restore rebuilds against a template tree (so sharding /
-device placement is the caller's choice). Atomic via temp-file rename."""
+device placement is the caller's choice). Atomic via temp-file rename.
+
+Dtype fidelity: ``np.savez`` silently degrades any non-native dtype — an
+ml_dtypes ``bfloat16`` plane comes back as a void ``|V2`` array with its
+type identity gone — so every leaf is stored as RAW BYTES (a flat uint8
+buffer) with its true dtype string and shape recorded in the JSON index,
+and restore views the buffer back. Save -> load is bit-identical for
+every plane a ``RoundCarry`` holds (f32 globals, bf16 pending leaves,
+int8 compressed slots, i32 scheduler fields, bool ready masks;
+tests/test_checkpoint_roundtrip.py). Templates only contribute tree
+structure and an expected dtype — ``jax.eval_shape`` ShapeDtypeStruct
+leaves work (no materialization); a dtype mismatch between the file and
+the template is an error, never a silent cast."""
 from __future__ import annotations
 
 import json
@@ -22,22 +34,56 @@ def _paths(tree) -> list:
 
 
 def save_checkpoint(path: str, tree: Any, step: int = 0, extra: dict = None):
-    arrays = {f"arr_{i}": np.asarray(v) for i, (_, v) in enumerate(_paths(tree))}
-    index = {"keys": [k for k, _ in _paths(tree)], "step": step,
-             "extra": extra or {}}
+    flat = _paths(tree)
+    arrays, dtypes, shapes = {}, [], []
+    for i, (_, v) in enumerate(flat):
+        a = np.asarray(v)
+        dtypes.append(str(a.dtype))
+        shapes.append(list(a.shape))
+        # raw-bytes storage: np.savez round-trips uint8 exactly, and the
+        # true dtype lives in the index — this is what keeps bf16 (and any
+        # other non-native dtype) bit-identical through the npz container
+        arrays[f"arr_{i}"] = np.frombuffer(
+            np.ascontiguousarray(a).tobytes(), dtype=np.uint8)
+    index = {"keys": [k for k, _ in flat], "dtypes": dtypes,
+             "shapes": shapes, "step": step, "extra": extra or {}}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    # the .npz suffix keeps np.savez writing THIS file (it appends .npz to
+    # any other name, which would leak the mkstemp placeholder)
+    fd, tmp = tempfile.mkstemp(suffix=".npz", dir=os.path.dirname(path) or ".")
     os.close(fd)
     np.savez(tmp, __index__=json.dumps(index), **arrays)
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    os.replace(tmp, path)
+
+
+def _leaf_dtype(t) -> np.dtype:
+    """Template leaf dtype WITHOUT materializing the leaf — jax Arrays and
+    ``jax.eval_shape`` ShapeDtypeStructs expose .dtype; plain scalars fall
+    back through np.asarray. (The old ``np.asarray(template)`` path both
+    gathered sharded templates to host and turned ShapeDtypeStructs into
+    garbage object arrays.)"""
+    dt = getattr(t, "dtype", None)
+    return np.dtype(dt) if dt is not None else np.asarray(t).dtype
 
 
 def load_checkpoint(path: str, template: Any):
     z = np.load(path, allow_pickle=False)
     index = json.loads(str(z["__index__"]))
     leaves_t, treedef = jax.tree_util.tree_flatten(template)
-    arrays = [z[f"arr_{i}"] for i in range(len(leaves_t))]
-    restored = [np.asarray(a, dtype=np.asarray(t).dtype)
-                for a, t in zip(arrays, leaves_t)]
+    if len(index["keys"]) != len(leaves_t):
+        raise ValueError(
+            f"checkpoint {path!r} holds {len(index['keys'])} leaves but the "
+            f"template flattens to {len(leaves_t)} — the carry layout "
+            "changed (different cohort/compress/grouped planes?)")
+    restored = []
+    for i, t in enumerate(leaves_t):
+        dt = np.dtype(index["dtypes"][i])
+        want = _leaf_dtype(t)
+        if dt != want:
+            raise ValueError(
+                f"checkpoint leaf {index['keys'][i]!r} is {dt} but the "
+                f"template expects {want} — refusing a silent cast")
+        restored.append(np.frombuffer(z[f"arr_{i}"].tobytes(), dtype=dt)
+                        .reshape(index["shapes"][i]).copy())
     return (jax.tree_util.tree_unflatten(treedef, restored),
             index["step"], index["extra"])

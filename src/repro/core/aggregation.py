@@ -45,8 +45,19 @@ def guarded_global_update(global_vec, prev_global, agg, varsigma, *,
     same code path serves the host reference server and the jitted fused
     round; a raveled global is the single-leaf case.
 
+    The same select also guards a NON-FINITE aggregate (a deep-fade round
+    whose normalizer survives the clamp but whose payload overflowed, a
+    bf16 overflow, an unscreened NaN row): any NaN/Inf anywhere in ``agg``
+    holds w_g AND prev_global bit-identically — one poisoned period is a
+    skipped period, never a destroyed model. The check is a scalar
+    reduction over the (replicated, post-collective) aggregate, so the
+    sharded round still compiles to ONE cross-client psum.
+
     Returns (new_global, new_prev_global)."""
-    has_uploaders = varsigma > threshold
+    finite = jnp.bool_(True)
+    for leaf in jax.tree_util.tree_leaves(agg):
+        finite = finite & jnp.all(jnp.isfinite(leaf))
+    has_uploaders = (varsigma > threshold) & finite
 
     def upd(g, a):
         cand = g + a if delta else a

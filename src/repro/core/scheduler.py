@@ -59,6 +59,11 @@ TAG_AVAIL, TAG_DROPOUT, TAG_SCHED, TAG_TRAIT = 4, 5, 6, 7
 # from the counter stream) and the stochastic-rounding dither for int8
 # slot storage (folded with the shard offset so shard-local draws differ)
 TAG_COMPRESS, TAG_QUANT = 8, 9
+# fault injection (FaultConfig): one per-round (K,) uniform partitioned
+# into disjoint payload-fault bands plus a second fold for the channel
+# deep-fade mask — same counter family, so host/fused/sharded inject the
+# identical fault realization
+TAG_FAULT = 10
 
 
 def round_tag_key(base_key, round_idx, tag: int):
@@ -226,6 +231,152 @@ def scenario_hyperparams(base_key, k: int, sc: ScenarioConfig):
         batch_k = c[jax.random.randint(jax.random.fold_in(tk, 3), (k,), 0,
                                        len(sc.het_batch))]
     return steps_k, batch_k
+
+
+# ---------------------------------------------------------------------------
+# fault injection (rides the scenario simulator's counter-RNG family)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Injectable client/channel/pod faults, advanced inside the scan with
+    counter RNG (``TAG_FAULT``) exactly like the scenario masks — the same
+    realization on host, fused, and sharded paths, killable/resumable
+    bit-for-bit. The default config is the identity: no faults, and every
+    fault stage is skipped at trace time, so the compiled program is
+    bit-identical to one built without a FaultConfig at all.
+
+    Payload faults corrupt a client's TRAINED model the round it restarts
+    (one uniform per client per round, partitioned into disjoint bands, so
+    a client suffers at most one payload fault per round):
+
+    * ``nan_frac`` — the row is overwritten with NaN (``nan_mode="nan"``)
+      or +Inf (``nan_mode="inf"``): the killed-job / corrupted-upload mode
+      that screening must mask out of the superposition.
+    * ``byzantine_frac`` with ``byzantine_scale`` — the local delta is
+      scaled adversarially: w' = w_g + scale * (w - w_g); finite but
+      divergent, the mode the norm screen / divergence rollback catch.
+
+    ``deep_fade_frac`` collapses a client's channel draw to
+    ``deep_fade_gain * |h_k|`` — a fade outlier that drives the power cap
+    (7) toward zero and the normalizer toward the zero-uploader guard.
+
+    ``pod_blackout`` (grouped sharded mode only) lists pod indices whose
+    clients are unavailable for rounds in [``blackout_start``,
+    ``blackout_stop``): ready clients HOLD their updates (staleness grows)
+    and rejoin when the blackout lifts — a preempted-host drill.
+
+    ``start``/``stop`` gate every fault to rounds in [start, stop)
+    (stop = -1 means forever) — single-round injections and
+    kill-at-round-r experiments key off this window.
+    """
+    nan_frac: float = 0.0
+    nan_mode: str = "nan"          # "nan" | "inf"
+    byzantine_frac: float = 0.0
+    byzantine_scale: float = -50.0
+    deep_fade_frac: float = 0.0
+    deep_fade_gain: float = 1e-4
+    pod_blackout: tuple = ()       # pod indices (grouped sharded mode)
+    blackout_start: int = 0
+    blackout_stop: int = 0         # blackout rounds: [start, stop)
+    start: int = 0
+    stop: int = -1                 # payload/channel faults: [start, stop);
+                                   # -1 = no upper bound
+
+    def __post_init__(self):
+        if self.nan_mode not in ("nan", "inf"):
+            raise ValueError(f"nan_mode={self.nan_mode!r} (expected 'nan' "
+                             "or 'inf')")
+        for name in ("nan_frac", "byzantine_frac", "deep_fade_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name}={v} (expected [0, 1])")
+        if self.nan_frac + self.byzantine_frac > 1.0:
+            raise ValueError(
+                f"nan_frac + byzantine_frac = "
+                f"{self.nan_frac + self.byzantine_frac} > 1 (the payload "
+                "bands partition one uniform draw)")
+        if any(int(p) < 0 for p in self.pod_blackout):
+            raise ValueError(f"pod_blackout={self.pod_blackout} (expected "
+                             "non-negative pod indices)")
+
+    @property
+    def has_payload_faults(self) -> bool:
+        return self.nan_frac > 0.0 or self.byzantine_frac > 0.0
+
+    @property
+    def has_channel_faults(self) -> bool:
+        return self.deep_fade_frac > 0.0
+
+    @property
+    def has_blackout(self) -> bool:
+        return (len(self.pod_blackout) > 0
+                and self.blackout_stop > self.blackout_start)
+
+    @property
+    def any(self) -> bool:
+        return (self.has_payload_faults or self.has_channel_faults
+                or self.has_blackout)
+
+
+def fault_active(fc: FaultConfig, round_idx):
+    """Traced bool: payload/channel faults are live at ``round_idx``."""
+    t = jnp.asarray(round_idx, jnp.int32)
+    live = t >= jnp.int32(fc.start)
+    if fc.stop >= 0:
+        live = live & (t < jnp.int32(fc.stop))
+    return live
+
+
+def fault_payload_masks(base_key, round_idx, k: int, fc: FaultConfig):
+    """(nan_mask, byzantine_mask) bool (K,): one uniform per client keyed
+    on (seed, round, TAG_FAULT), partitioned into disjoint bands
+    [0, nan_frac) and [nan_frac, nan_frac + byzantine_frac)."""
+    key = round_tag_key(base_key, round_idx, TAG_FAULT)
+    u = jax.random.uniform(key, (k,))
+    gate = fault_active(fc, round_idx)
+    nan_m = gate & (u < jnp.float32(fc.nan_frac))
+    byz_m = gate & (u >= jnp.float32(fc.nan_frac)) & (
+        u < jnp.float32(fc.nan_frac + fc.byzantine_frac))
+    return nan_m, byz_m
+
+
+def fault_channel_mask(base_key, round_idx, k: int, fc: FaultConfig):
+    """Deep-fade bool (K,) mask — an independent fold (1) off the round's
+    TAG_FAULT key, so it never correlates with the payload bands."""
+    key = jax.random.fold_in(
+        round_tag_key(base_key, round_idx, TAG_FAULT), 1)
+    u = jax.random.uniform(key, (k,))
+    return fault_active(fc, round_idx) & (u < jnp.float32(fc.deep_fade_frac))
+
+
+def blackout_active(fc: FaultConfig, round_idx):
+    """Traced bool: the pod-blackout window covers ``round_idx``."""
+    t = jnp.asarray(round_idx, jnp.int32)
+    return (t >= jnp.int32(fc.blackout_start)) & (
+        t < jnp.int32(fc.blackout_stop))
+
+
+def inject_payload_faults(trained, global_tree, nan_mask, byz_mask,
+                          fc: FaultConfig):
+    """Corrupt the faulty rows of a stacked trained tree: every leaf of a
+    NaN-faulted client's row becomes NaN/Inf; a Byzantine row's delta from
+    the global model is scaled by ``byzantine_scale`` (works for both
+    transmit modes — the model row moves, so the derived delta scales).
+    ``trained`` leaves are (rows, ...); ``global_tree`` the matching
+    unstacked model. Masks are (rows,) bool."""
+    fill = jnp.float32(jnp.nan if fc.nan_mode == "nan" else jnp.inf)
+    scale = jnp.float32(fc.byzantine_scale)
+
+    def leaf(tr, g):
+        shape = (tr.shape[0],) + (1,) * (tr.ndim - 1)
+        nm = nan_mask.reshape(shape)
+        bm = byz_mask.reshape(shape)
+        gb = jnp.broadcast_to(g[None].astype(tr.dtype), tr.shape)
+        out = jnp.where(bm, (gb + scale * (tr - gb)).astype(tr.dtype), tr)
+        return jnp.where(nm, fill.astype(tr.dtype), out)
+
+    return jax.tree_util.tree_map(leaf, trained, global_tree)
 
 
 # ---------------------------------------------------------------------------

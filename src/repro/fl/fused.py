@@ -24,19 +24,23 @@ epoch-shuffled) — see EXPERIMENTS.md §Fused PAOTA round.
 """
 from __future__ import annotations
 
+import os
 from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import io as ckpt_io
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
 from repro.core.aggregation import ravel
 from repro.core.power_control import p2_constants
 from repro.core.compress import randmask_indices
 from repro.core.scheduler import (TAG_CHANNEL, TAG_COMPRESS, TAG_NOISE,
-                                  TAG_QUANT, TAG_SCHED, SchedulerConfig,
-                                  counter_latencies, round_tag_key,
+                                  TAG_QUANT, TAG_SCHED, FaultConfig,
+                                  SchedulerConfig, counter_latencies,
+                                  fault_channel_mask, fault_payload_masks,
+                                  inject_payload_faults, round_tag_key,
                                   scenario_hyperparams, scenario_latencies,
                                   scenario_masks)
 from repro.fl.engine import BatchedEngine, make_engine
@@ -103,6 +107,18 @@ class FusedPAOTA:
     plane never enters the carry. ``compress=None`` (default) and the
     s = d identity compression are bit-identical to the uncompressed
     cohort program.
+
+    Fault tolerance (all off by default — the compiled program is then
+    op-for-op the historical one): ``faults`` (a ``repro.core.scheduler
+    .FaultConfig``) injects NaN/Inf payload rows, Byzantine-scaled
+    deltas, and deep-fade channel outliers from the counter-RNG
+    ``TAG_FAULT`` streams (pod blackouts need the grouped sharded
+    driver); ``screen`` masks non-finite (and, with ``screen_max_norm``,
+    over-norm) uploads out of the superposition like phantom clients;
+    ``divergence_factor`` arms the post-update rollback to the carry's
+    last-good global; ``checkpoint_every=N`` + ``checkpoint_dir``
+    snapshots the full carry every N rounds (``save_checkpoint`` /
+    ``restore_checkpoint`` — resume is bit-exact thanks to counter RNG).
     """
 
     def __init__(self, init_params, clients, chan: ChannelConfig,
@@ -112,7 +128,10 @@ class FusedPAOTA:
                  cohort_size: int | None = None, scenario=None,
                  compress: str | None = None, compress_ratio: float = 1.0,
                  slot_dtype: str | None = None,
-                 error_feedback: bool = True):
+                 error_feedback: bool = True, faults: FaultConfig | None = None,
+                 screen: bool = False, screen_max_norm: float = 0.0,
+                 divergence_factor: float = 0.0, checkpoint_every: int = 0,
+                 checkpoint_dir: str | None = None):
         if params_mode not in ("raveled", "pytree"):
             raise ValueError(f"params_mode={params_mode!r} (expected "
                              "'raveled' or 'pytree')")
@@ -183,6 +202,42 @@ class FusedPAOTA:
                                  "0 < ratio <= 1, the kept fraction s/d)")
             self.compress_s = min(self.d,
                                   max(1, int(round(self.d * compress_ratio))))
+        if faults is not None and not isinstance(faults, FaultConfig):
+            raise ValueError(f"faults={faults!r} (expected a FaultConfig "
+                             "or None)")
+        self.faults = faults
+        if faults is not None and faults.has_blackout:
+            grouping = getattr(self, "_grouping", None)
+            if grouping is None:
+                raise NotImplementedError(
+                    f"pod_blackout={faults.pod_blackout} needs the grouped "
+                    f"sharded driver (pods are a mesh topology): the nearest "
+                    f"supported configuration is ShardedPAOTA with "
+                    f"group_period >= 1 and pod_axes covering "
+                    f"{len(faults.pod_blackout)}+ pods")
+            n_pods = getattr(self, "n_pod_groups", 1)
+            bad = [int(p) for p in faults.pod_blackout if int(p) >= n_pods]
+            if bad:
+                raise ValueError(
+                    f"pod_blackout={faults.pod_blackout}: pods {bad} do not "
+                    f"exist (the mesh's pod axes index {n_pods} pods)")
+        if screen_max_norm < 0.0:
+            raise ValueError(f"screen_max_norm={screen_max_norm} (expected "
+                             ">= 0; 0 = finite-only screening)")
+        if screen_max_norm > 0.0 and not screen:
+            raise ValueError("screen_max_norm is the screening norm fence; "
+                             "pass screen=True to enable it")
+        if divergence_factor < 0.0:
+            raise ValueError(f"divergence_factor={divergence_factor} "
+                             "(expected >= 0; 0 = detector off)")
+        self.checkpoint_every = int(checkpoint_every or 0)
+        if self.checkpoint_every < 0:
+            raise ValueError(f"checkpoint_every={checkpoint_every} "
+                             "(expected >= 0; 0 = no periodic snapshots)")
+        if self.checkpoint_every and not checkpoint_dir:
+            raise ValueError("checkpoint_every without checkpoint_dir: pass "
+                             "the directory the periodic snapshots go to")
+        self.checkpoint_dir = checkpoint_dir
         c1, c0 = p2_constants(cfg.smooth_l, cfg.eps_bound, self.k, self.d,
                               chan.sigma_n2)
         # chan.sigma_n is a concrete float (jnp.sqrt is not callable through
@@ -199,7 +254,10 @@ class FusedPAOTA:
                               slot_dtype=((sd or pending_dtype)
                                           if self.compress else ""),
                               error_feedback=bool(error_feedback
-                                                  and self.compress))
+                                                  and self.compress),
+                              screen=bool(screen),
+                              screen_max_norm=float(screen_max_norm),
+                              divergence_factor=float(divergence_factor))
         self._lat_key = jax.random.PRNGKey(sched_cfg.seed)
         self._srv_key = jax.random.PRNGKey(cfg.seed)
         engine.enable_counter_plan(self._srv_key)
@@ -256,11 +314,51 @@ class FusedPAOTA:
         return self.engine._train_all(self.unravel(global_state), xs, ys,
                                       idx, steps)
 
+    def _faulty_local_train(self, global_state, x, y, broadcast_round):
+        """``_local_train_all`` with the round's payload faults injected:
+        the corrupt rows are what the uplink would carry, so screening and
+        the aggregate guards see exactly what a broken client emits."""
+        trained = self._local_train_all(global_state, x, y, broadcast_round)
+        nm, bm = fault_payload_masks(self._lat_key, broadcast_round, self.k,
+                                     self.faults)
+        rows = jax.tree_util.tree_leaves(trained)[0].shape[0]
+        if rows > self.k:
+            # sharded round-0 init runs these full-federation streams on
+            # the phantom-padded engine arrays: phantoms never fault
+            pad = jnp.zeros((rows - self.k,), bool)
+            nm, bm = jnp.concatenate([nm, pad]), jnp.concatenate([bm, pad])
+        return inject_payload_faults(trained, global_state, nm, bm,
+                                     self.faults)
+
+    def _faulty_cohort_train(self, global_state, x, y, broadcast_round, ids):
+        """Cohort twin: masks are drawn full-K and gathered by the slots'
+        GLOBAL client ids, so whether a client trains in a dense row or a
+        cohort slot it suffers the identical fault realization."""
+        trained = self._cohort_train(global_state, x, y, broadcast_round, ids)
+        nm, bm = fault_payload_masks(self._lat_key, broadcast_round, self.k,
+                                     self.faults)
+        ids = ids.astype(jnp.uint32)
+        return inject_payload_faults(trained, global_state, nm[ids], bm[ids],
+                                     self.faults)
+
+    def _faulty_channel(self, base_channel):
+        """Channel stream with the deep-fade outliers applied: faded rows
+        keep their draw scaled by ``deep_fade_gain`` — cap (7) then pushes
+        their transmit power toward zero."""
+        fc = self.faults
+
+        def channel(t):
+            h = base_channel(t)
+            fade = fault_channel_mask(self._lat_key, t, self.k, fc)
+            return jnp.where(fade, h * jnp.float32(fc.deep_fade_gain), h)
+        return channel
+
     def _streams(self) -> RoundStreams:
         """Single-device streams: callbacks see the whole federation, so
         the round core's (K,) rows are the global client set. The scenario
         mask callback stays None unless the scenario can actually mask —
-        the round core's dense program is then untouched at trace time."""
+        the round core's dense program is then untouched at trace time
+        (and the fault wrappers only exist when their fraction is > 0)."""
         sc = self.scenario
         if sc is None:
             lat = lambda r: counter_latencies(
@@ -287,12 +385,20 @@ class FusedPAOTA:
                 self.compress_s)
         if self._rcfg.slot_dtype == "int8":
             quant_key = lambda r: round_tag_key(self._srv_key, r, TAG_QUANT)
+        fc = self.faults
+        local_train = self._local_train_all
+        if fc is not None and fc.has_payload_faults:
+            local_train = self._faulty_local_train
+            if cohort_train is not None:
+                cohort_train = self._faulty_cohort_train
+        channel = lambda t: sample_channel_gains(
+            round_tag_key(self._srv_key, t, TAG_CHANNEL), self.k, self.chan)
+        if fc is not None and fc.has_channel_faults:
+            channel = self._faulty_channel(channel)
         return RoundStreams(
-            local_train=self._local_train_all,
+            local_train=local_train,
             latencies=lat,
-            channel=lambda t: sample_channel_gains(
-                round_tag_key(self._srv_key, t, TAG_CHANNEL), self.k,
-                self.chan),
+            channel=channel,
             noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
             scenario=scen,
             cohort_train=cohort_train,
@@ -313,7 +419,8 @@ class FusedPAOTA:
                 rcfg=self._rcfg)
         return init_round_carry(vec, x, y, streams=self._streams(),
                                 pending_dtype=self._rcfg.pending_dtype,
-                                keep_pending=not self._rcfg.transmit_delta)
+                                keep_pending=not self._rcfg.transmit_delta,
+                                rcfg=self._rcfg)
 
     def _run_scan(self, carry: RoundCarry, x, y, n_rounds: int):
         return scan_rounds(carry, x, y, n_rounds, rcfg=self._rcfg,
@@ -337,12 +444,66 @@ class FusedPAOTA:
         g = self._init_global if self._carry is None else self._carry.global_vec
         return g if self.params_mode == "pytree" else self.unravel(g)
 
-    def advance(self, n_rounds: int) -> List[dict]:
-        """Run ``n_rounds`` PAOTA rounds in ONE lax.scan device call;
-        appends and returns the per-round history dicts."""
+    # ------------------------------------------------------------------
+    # checkpoint / resume (bit-exact: counter RNG keys every draw on the
+    # carry's own round index, so a restored carry replays the identical
+    # stream the uninterrupted run would have consumed)
+    # ------------------------------------------------------------------
+    def _ensure_carry(self):
         if self._carry is None:
             self._carry = self._jit_init(self._init_global, self.engine._x,
                                          self.engine._y)
+        return self._carry
+
+    def save_checkpoint(self, path: str):
+        """Snapshot the FULL round carry (every plane: globals, pending /
+        delta stacks, cohort slots, compressed residuals, held partials,
+        rollback slot) plus the history, raw-bytes bit-exact
+        (``repro.checkpoint.io``). Builds the round-0 carry first if the
+        driver has not advanced yet."""
+        carry = self._ensure_carry()
+        ckpt_io.save_checkpoint(path, jax.device_get(carry),
+                                step=len(self.history),
+                                extra={"history": self.history})
+
+    def restore_checkpoint(self, path: str):
+        """Rebind the driver to a snapshot: the carry planes restore
+        bit-exactly against the live carry's own structure/dtypes (a
+        layout mismatch — different cohort/compress/grouped planes — is an
+        error), the history replaces this driver's, and the next
+        ``advance`` continues the killed run bit-for-bit."""
+        template = self._ensure_carry()
+        carry, step, extra = ckpt_io.load_checkpoint(path, template)
+        self._carry = carry
+        self.history = list(extra.get("history", []))
+        return step
+
+    def _checkpoint_path(self, round_idx: int) -> str:
+        return os.path.join(self.checkpoint_dir, f"round_{round_idx:06d}.npz")
+
+    def advance(self, n_rounds: int) -> List[dict]:
+        """Run ``n_rounds`` PAOTA rounds; appends and returns the per-round
+        history dicts. ``checkpoint_every=N`` splits the scan at every
+        N-round boundary and snapshots the carry there (the chunked scan
+        consumes the identical counter-RNG streams, so checkpointing never
+        perturbs the trajectory)."""
+        every = self.checkpoint_every
+        if not every:
+            return self._advance(n_rounds)
+        rows: List[dict] = []
+        done = 0
+        while done < n_rounds:
+            at = len(self.history)
+            step = min(every - at % every, n_rounds - done)
+            rows.extend(self._advance(step))
+            done += step
+            if len(self.history) % every == 0:
+                self.save_checkpoint(self._checkpoint_path(len(self.history)))
+        return rows
+
+    def _advance(self, n_rounds: int) -> List[dict]:
+        """One uninterrupted ``lax.scan`` device call of ``n_rounds``."""
+        self._ensure_carry()
         self._carry, outs = self._jit_scan(self._carry, self.engine._x,
                                            self.engine._y, n_rounds=n_rounds)
         outs = {k: np.asarray(v) for k, v in outs.items()}
@@ -353,7 +514,9 @@ class FusedPAOTA:
                  "mean_staleness": float(outs["mean_staleness"][i]),
                  "beta_mean": float(outs["beta_mean"][i]),
                  "varsigma": float(outs["varsigma"][i]),
-                 "p2_objective": float(outs["p2_objective"][i])}
+                 "p2_objective": float(outs["p2_objective"][i]),
+                 "n_screened": float(outs["n_screened"][i]),
+                 "rolled_back": float(outs["rolled_back"][i])}
                 for i in range(n_rounds)]
         self.history.extend(rows)
         return rows

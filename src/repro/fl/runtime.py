@@ -177,6 +177,16 @@ class RoundCarry(NamedTuple):
                               # row; a re-scheduled client resumes its own
                               # accumulated error. Sharded: (K_local, s).
     resid_idx: jnp.ndarray = None    # (K, s) i32 — parked supports
+    good_global: jnp.ndarray = None  # divergence rollback only
+                              # (RoundCfg.divergence_factor > 0): params
+                              # pytree / (d,) — the last global model that
+                              # PASSED the post-update norm check; a
+                              # diverged round restores w_g AND prev_global
+                              # from this slot (replicated, like the
+                              # globals). None when the detector is off.
+    good_norm2: jnp.ndarray = None   # f32 scalar — ||good_global||^2,
+                              # carried so the check never re-sweeps the
+                              # last-good model
 
 
 class RoundCfg(NamedTuple):
@@ -216,6 +226,22 @@ class RoundCfg(NamedTuple):
     error_feedback: bool = False  # carry per-slot EF residuals + the (K, s)
                               # parked plane; compensation a = delta +
                               # parked residual is what gets compressed
+    screen: bool = False      # per-row payload screening (containment):
+                              # a row whose stats sweep shows a non-finite
+                              # value — or a norm beyond screen_max_norm —
+                              # is masked out of the superposition exactly
+                              # like a phantom client (b = 0, zeroed
+                              # payload row, sanitized per-row scalars).
+                              # False emits the unscreened program op for
+                              # op (trace-time branch).
+    screen_max_norm: float = 0.0  # Byzantine norm fence: rows with
+                              # ||payload|| > screen_max_norm are screened
+                              # too (0 = finite-only screening)
+    divergence_factor: float = 0.0  # post-update divergence detector:
+                              # roll back to the last-good global when
+                              # ||w_g_new|| > factor * max(||good||,
+                              # DIVERGENCE_NORM_FLOOR). 0 = off (no
+                              # good-global carry slot, program unchanged)
 
 
 class GroupTopology(NamedTuple):
@@ -352,6 +378,74 @@ def compressed_round_factors(values, idx, resid, resid_idx, global_vec,
     theta = similarity_factor(cos)
     rho = staleness_factor(stal, omega)
     return rho, theta, pn2
+
+
+# divergence detector: a global whose norm sits below this floor compares
+# against the floor instead (a near-zero-init model must be allowed to
+# grow — factor * ~0 would flag every first update as divergent)
+DIVERGENCE_NORM_FLOOR = 1.0
+
+
+def _tree_sq_norm(tree):
+    """||tree||^2 as one f32 scalar (sum over leaves; model-dims only, so
+    it is shard-local under client sharding — the globals are replicated)."""
+    total = jnp.float32(0.0)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        total = total + jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+    return total
+
+
+def _screen_ok(theta, w_norm2, rcfg: RoundCfg):
+    """Per-row containment verdict from the stats sweep the round already
+    ran: a corrupt payload row (NaN/Inf anywhere in it) surfaces as a
+    non-finite theta or sq-norm — the sweep's reductions ARE the detector,
+    no extra model-plane pass — and ``screen_max_norm`` adds a Byzantine
+    norm fence on top. Returns (ok mask, sanitized theta, sanitized
+    w_norm2): the sanitized per-row scalars are what keep a screened row
+    from poisoning the water-filling bounds (NaN * b survives b = 0)."""
+    ok = jnp.isfinite(theta) & jnp.isfinite(w_norm2)
+    if rcfg.screen_max_norm > 0.0:
+        ok = ok & (w_norm2 <= jnp.float32(rcfg.screen_max_norm) ** 2)
+    return ok, jnp.where(ok, theta, 0.0), jnp.where(ok, w_norm2, 0.0)
+
+
+def _zero_rows(tree, ok):
+    """Zero the failing rows of a stacked tree: a screened row superposes
+    exact +0.0 into every contraction — bit-identical to a never-scheduled
+    client's b = 0 contribution — instead of 0 * NaN = NaN."""
+    def leaf(l):
+        m = ok.reshape((ok.shape[0],) + (1,) * (l.ndim - 1))
+        return jnp.where(m, l, jnp.zeros((), l.dtype))
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def _divergence_rollback(new_global, new_prev, carry: RoundCarry,
+                         rcfg: RoundCfg):
+    """Post-update divergence detector: if ||w_g^{new}|| jumped beyond
+    ``divergence_factor`` times the last-good norm (or is non-finite —
+    the comparison is written so NaN lands on the diverged side), restore
+    BOTH w_g and prev_global from the carry's last-good slot (the
+    similarity direction collapses to zero for one round — the existing
+    gnorm guard maps that to cos = 0) and keep the slot; otherwise the
+    accepted global becomes the new last-good. Scalar-select logic over
+    replicated leaves: no collectives, ONE extra model copy in the carry.
+
+    Returns (global, prev, good_global, good_norm2, rolled_back f32)."""
+    n_new = _tree_sq_norm(new_global)
+    f2 = jnp.float32(rcfg.divergence_factor) ** 2
+    limit = f2 * jnp.maximum(carry.good_norm2,
+                             jnp.float32(DIVERGENCE_NORM_FLOOR) ** 2)
+    diverged = ~(n_new <= limit)
+
+    def sel(gd, cand):
+        return jnp.where(diverged, gd, cand)
+
+    new_global = jax.tree_util.tree_map(sel, carry.good_global, new_global)
+    new_prev = jax.tree_util.tree_map(sel, carry.good_global, new_prev)
+    good_n2 = jnp.where(diverged, carry.good_norm2, n_new)
+    # accepted -> good slot IS the accepted global; diverged -> unchanged
+    return (new_global, new_prev, new_global, good_n2,
+            diverged.astype(jnp.float32))
 
 
 def _storage_dtype(rcfg: RoundCfg):
@@ -526,6 +620,21 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         carry.deltas, None if rcfg.transmit_delta else carry.pending,
         carry.global_vec, carry.prev_global, stal, rcfg.omega, tp=tp)
 
+    # 2b. containment (trace-time branch — screen=False emits the
+    # historical program op for op): rows the stats sweep exposed as
+    # corrupt (non-finite) or norm-fenced are masked out of this round's
+    # superposition exactly like phantom clients — b = 0, the payload row
+    # zeroed so every contraction sees exact +0.0, and the per-row scalars
+    # sanitized so the water-filling bounds never touch a NaN. The masking
+    # is shard-local and happens BEFORE the collective, so the sharded
+    # round still compiles to ONE cross-client psum.
+    n_screened = jnp.float32(0.0)
+    if rcfg.screen:
+        ok, theta, w_norm2 = _screen_ok(theta, w_norm2, rcfg)
+        n_screened = ksum(b * (~ok).astype(jnp.float32))
+        b = b * ok.astype(jnp.float32)
+        payload = _zero_rows(payload, ok)
+
     # 3. P2 -> beta -> powers (exact water-filling, pure jnp; the grid and
     # golden-section reductions over K run as psums under sharding). At a
     # grouped non-sync period only the pod's own clients superpose, so the
@@ -581,6 +690,15 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
             * partial[None, :]
         varsigma = jnp.float32(0.0)
         new_global, new_prev = carry.global_vec, carry.prev_global
+
+    # 6b. divergence rollback (trace-time branch; grouped non-sync periods
+    # hold the global, so only update periods are checked) — happens BEFORE
+    # the broadcast so a rolled-back round retrains from the restored model
+    good, good_n2 = carry.good_global, carry.good_norm2
+    rolled = jnp.float32(0.0)
+    if rcfg.divergence_factor > 0.0 and sync:
+        new_global, new_prev, good, good_n2, rolled = _divergence_rollback(
+            new_global, new_prev, carry, rcfg)
 
     # 7. broadcast w^{r+1}: every restarter — uploader, or dropped uploader
     # whose update was lost in transit — begins fresh local training (at a
@@ -674,11 +792,14 @@ def paota_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         # normalized this period — the window's varsigma lands at the sync)
         "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
         "p2_objective": p2_metric,
+        "n_screened": n_screened,
+        "rolled_back": rolled,
     }
     carry = RoundCarry(t=t_next, time=time, ready=n_ready,
                        busy_lat=n_lat, model_round=n_model,
                        global_vec=new_global, prev_global=new_prev,
-                       pending=pending, deltas=deltas, held=held)
+                       pending=pending, deltas=deltas, held=held,
+                       good_global=good, good_norm2=good_n2)
     return carry, out
 
 
@@ -759,6 +880,27 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         rho, theta, w_norm2 = round_factors(
             carry.deltas, None if rcfg.transmit_delta else carry.pending,
             carry.global_vec, carry.prev_global, stal, rcfg.omega)
+
+    # 2b. containment over the cohort slots (same contract as the dense
+    # step's: corrupt/fenced rows leave the superposition as exact zeros
+    # — the phantom-slot masking — and the per-row scalars are sanitized
+    # before water-filling; trace-time branch, screen=False is the
+    # unscreened program op for op). Compressed slots zero both the value
+    # rows and the dequantization scales, so an int8 slot with a NaN
+    # absmax scale contributes 0 * 0, never 0 * NaN.
+    n_screened = jnp.float32(0.0)
+    vals_s, scale_s = carry.deltas, carry.slot_scale
+    if rcfg.screen:
+        ok, theta, w_norm2 = _screen_ok(theta, w_norm2, rcfg)
+        n_screened = ksum(b * (~ok).astype(jnp.float32))
+        b = b * ok.astype(jnp.float32)
+        if rcfg.compress:
+            vals_s = _zero_rows(vals_s, ok)
+            if scale_s is not None:
+                scale_s = jnp.where(ok, scale_s, 0.0)
+            v_id = _zero_rows(v_id, ok)
+        else:
+            payload = _zero_rows(payload, ok)
     p_max = jnp.full((m,), rcfg.p_max_watts, jnp.float32)
     beta, p2_obj = waterfill_beta_jnp(rho, theta, p_max, b, rcfg.c1, rcfg.c0,
                                       axis_name=axis_name)
@@ -775,9 +917,9 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     # feeds it directly with its scale folded into the weights.
     if rcfg.compress and not identity:
         agg, varsigma = paota_aggregate_compressed(
-            carry.deltas, carry.slot_idx, powers, b,
+            vals_s, carry.slot_idx, powers, b,
             streams.noise_key(carry.t), rcfg.sigma_n, d_model,
-            scale=carry.slot_scale, axis_name=axis_name)
+            scale=scale_s, axis_name=axis_name)
     else:
         agg, varsigma = paota_aggregate_stacked(
             v_id if rcfg.compress else payload, powers, b,
@@ -785,6 +927,14 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
     new_global, new_prev = guarded_global_update(
         carry.global_vec, carry.prev_global, agg, varsigma,
         delta=rcfg.transmit_delta)
+
+    # 6b. divergence rollback (trace-time branch) — before the broadcast,
+    # so a rolled-back round reschedules/trains from the restored model
+    good, good_n2 = carry.good_global, carry.good_norm2
+    rolled = jnp.float32(0.0)
+    if rcfg.divergence_factor > 0.0:
+        new_global, new_prev, good, good_n2, rolled = _divergence_rollback(
+            new_global, new_prev, carry, rcfg)
 
     # 7a. slot turnover: departing occupants (uploaded, or upload dropped
     # in transit) free their slots; available idle clients fill them in
@@ -835,6 +985,11 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         resid_idx = carry.resid_idx.at[park_row].set(carry.slot_resid_idx,
                                                      mode="drop")
         pr_val = jnp.where(take[:, None], resid_val[new_occ], 0.0)
+        if rcfg.screen:
+            # a screened slot's parked residual may be the corrupt row's
+            # NaN complement — resuming it would re-poison every later
+            # round of an otherwise-recovered client
+            pr_val = jnp.where(jnp.isfinite(pr_val), pr_val, 0.0)
         pr_idx = resid_idx[new_occ]
         consumed = jnp.where(take, new_occ, k_local)
         resid_val = resid_val.at[consumed].set(0.0, mode="drop")
@@ -895,6 +1050,8 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
         "beta_mean": ksum(beta * b) / denom,
         "varsigma": jnp.where(varsigma > VARSIGMA_MIN, varsigma, 0.0),
         "p2_objective": jnp.where(n_upl > 0, p2_obj, jnp.inf),
+        "n_screened": n_screened,
+        "rolled_back": rolled,
     }
     carry = RoundCarry(t=t_next, time=time, ready=n_ready,
                        busy_lat=n_lat, model_round=n_model,
@@ -904,23 +1061,27 @@ def _cohort_round_step(carry: RoundCarry, x, y, *, rcfg: RoundCfg,
                        slot_idx=slot_idx, slot_scale=slot_scale,
                        slot_resid=slot_resid,
                        slot_resid_idx=slot_resid_idx,
-                       resid_val=resid_val, resid_idx=resid_idx)
+                       resid_val=resid_val, resid_idx=resid_idx,
+                       good_global=good, good_norm2=good_n2)
     return carry, out
 
 
 def init_round_carry(vec, x, y, *, streams: RoundStreams,
                      pending_dtype: str = "float32",
-                     keep_pending: bool = True) -> RoundCarry:
+                     keep_pending: bool = True,
+                     rcfg: RoundCfg | None = None) -> RoundCarry:
     """Round-0 kick-off: broadcast w_g^0 to everyone and precompute their
     local training (mirrors ``PAOTAServer.__init__``). ``vec`` is the
     params pytree (raveled = single (d,) leaf); shapes follow the streams'
     view of the federation (all K single-device; K/n per shard). The f32
     delta (``trained - w_g^0``) is formed before the optional storage
     cast. ``keep_pending=False`` (transmit='delta') carries the delta
-    plane only."""
+    plane only. ``rcfg`` (only its divergence knob is read) seeds the
+    last-good rollback slot from w_g^0 when the detector is on."""
     trained = streams.local_train(vec, x, y, 0)
     k_local = jax.tree_util.tree_leaves(trained)[0].shape[0]
     dtype = jnp.dtype(pending_dtype)
+    diverg = bool(rcfg is not None and rcfg.divergence_factor > 0.0)
     return RoundCarry(
         t=jnp.int32(0),
         time=jnp.float32(0.0),
@@ -932,6 +1093,8 @@ def init_round_carry(vec, x, y, *, streams: RoundStreams,
         pending=_cast_rows(trained, dtype) if keep_pending else None,
         deltas=jax.tree_util.tree_map(
             lambda tr, g: (tr - g[None]).astype(dtype), trained, vec),
+        good_global=vec if diverg else None,
+        good_norm2=_tree_sq_norm(vec) if diverg else None,
     )
 
 
@@ -967,6 +1130,9 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
     trained = streams.cohort_train(vec, x, y, 0, occ)
     dtype = jnp.dtype(pending_dtype)
     compress = bool(rcfg is not None and rcfg.compress)
+    diverg = bool(rcfg is not None and rcfg.divergence_factor > 0.0)
+    good = vec if diverg else None
+    good_n2 = _tree_sq_norm(vec) if diverg else None
     if compress:
         # compressed payloads ride transmit='delta' (driver-enforced);
         # raveled single-leaf, so `trained` is a bare (m, d) array
@@ -992,6 +1158,8 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
             slot_resid_idx=e_idx,
             resid_val=jnp.zeros((k, s), jnp.float32) if ef else None,
             resid_idx=jnp.zeros((k, s), jnp.int32) if ef else None,
+            good_global=good,
+            good_norm2=good_n2,
         )
     return RoundCarry(
         t=jnp.int32(0),
@@ -1006,6 +1174,8 @@ def init_cohort_carry(vec, x, y, *, streams: RoundStreams, k: int, m: int,
             lambda tr, g: (tr - g[None]).astype(dtype), trained, vec),
         slot_client=occ,
         slot_live=live,
+        good_global=good,
+        good_norm2=good_n2,
     )
 
 

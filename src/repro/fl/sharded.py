@@ -104,11 +104,15 @@ try:                                    # jax >= 0.6 exports it at top level
 except ImportError:                     # 0.4.x: experimental namespace
     from jax.experimental.shard_map import shard_map
 
+import numpy as np
+
 from repro.core.aircomp import ChannelConfig, sample_channel_gains
 from repro.core.compress import randmask_indices
 from repro.core.scheduler import (TAG_CHANNEL, TAG_COMPRESS, TAG_NOISE,
                                   TAG_QUANT, TAG_SCHED, SchedulerConfig,
-                                  counter_latencies, round_tag_key,
+                                  blackout_active, counter_latencies,
+                                  fault_channel_mask, fault_payload_masks,
+                                  inject_payload_faults, round_tag_key,
                                   scenario_latencies, scenario_masks)
 from repro.fl.fused import FusedPAOTA
 from repro.fl.runtime import (GroupTopology, RoundCarry, RoundStreams,
@@ -118,7 +122,7 @@ from repro.launch.mesh import data_axes
 from repro.sharding.rules import batch_specs, stack_client_specs
 
 OUT_KEYS = ("n_participants", "time", "mean_staleness", "beta_mean",
-            "varsigma", "p2_objective")
+            "varsigma", "p2_objective", "n_screened", "rolled_back")
 
 
 class ShardedPAOTA(FusedPAOTA):
@@ -162,7 +166,10 @@ class ShardedPAOTA(FusedPAOTA):
                  cohort_size: int | None = None, scenario=None,
                  compress: str | None = None, compress_ratio: float = 1.0,
                  slot_dtype: str | None = None,
-                 error_feedback: bool = True, tp_axes=None):
+                 error_feedback: bool = True, tp_axes=None, faults=None,
+                 screen: bool = False, screen_max_norm: float = 0.0,
+                 divergence_factor: float = 0.0, checkpoint_every: int = 0,
+                 checkpoint_dir: str | None = None):
         if mesh is None:
             from repro.launch.mesh import make_client_mesh
             mesh = make_client_mesh()
@@ -274,6 +281,16 @@ class ShardedPAOTA(FusedPAOTA):
                 "active-cohort mode does not compose with grouped "
                 "aggregation yet: the held-window partials are dense-plane "
                 "accumulators (pass cohort_size=None or group_period=0)")
+        if faults is not None and getattr(faults, "has_blackout", False):
+            pods = (tuple(pod_axes) if pod_axes else (axes[0],)) \
+                if group_period else ()
+            if pods and pods != axes[:len(pods)]:
+                raise NotImplementedError(
+                    f"pod_blackout with pod_axes={pods}: the blackout's "
+                    f"pod -> client-row map assumes the pod axes LEAD the "
+                    f"client axes {axes} (pods own contiguous row blocks); "
+                    f"the nearest supported configuration reorders "
+                    f"client_axes to put {pods} first")
         # super() builds the engine, RoundCfg, keys, and jits _run_scan —
         # which the overrides below turn into the shard_map program
         super().__init__(init_params, clients, chan, sched_cfg, cfg,
@@ -282,9 +299,19 @@ class ShardedPAOTA(FusedPAOTA):
                          scenario=scenario, compress=compress,
                          compress_ratio=compress_ratio,
                          slot_dtype=slot_dtype,
-                         error_feedback=error_feedback)
+                         error_feedback=error_feedback, faults=faults,
+                         screen=screen, screen_max_norm=screen_max_norm,
+                         divergence_factor=divergence_factor,
+                         checkpoint_every=checkpoint_every,
+                         checkpoint_dir=checkpoint_dir)
         if group_period:
             self._rcfg = self._rcfg._replace(group_period=group_period)
+            if self.checkpoint_every % group_period:
+                raise ValueError(
+                    f"checkpoint_every={self.checkpoint_every} must be a "
+                    f"multiple of group_period={group_period}: the grouped "
+                    f"scan advances whole windows, so snapshots land on "
+                    f"window boundaries only")
         # phantom-client padding: pad K to the next multiple of the
         # client-axis extent with masked never-ready clients
         self.k_pad = -(-self.k // self.n_shards) * self.n_shards
@@ -375,6 +402,9 @@ class ShardedPAOTA(FusedPAOTA):
         # like the payload plane they replace
         comp_spec = P(ax, None) if self._rcfg.compress else None
         ef_spec = comp_spec if self._rcfg.error_feedback else None
+        # the divergence detector's last-good slot replicates like the
+        # globals it snapshots (None subtree when the detector is off)
+        diverg = self._rcfg.divergence_factor > 0.0
         self._carry_specs = RoundCarry(
             t=P(), time=P(), ready=P(ax), busy_lat=P(ax),
             model_round=P(ax), global_vec=glob_spec, prev_global=glob_spec,
@@ -387,7 +417,9 @@ class ShardedPAOTA(FusedPAOTA):
             slot_idx=comp_spec,
             slot_scale=(P(ax) if self._rcfg.slot_dtype == "int8" else None),
             slot_resid=ef_spec, slot_resid_idx=ef_spec,
-            resid_val=ef_spec, resid_idx=ef_spec)
+            resid_val=ef_spec, resid_idx=ef_spec,
+            good_global=glob_spec if diverg else None,
+            good_norm2=P() if diverg else None)
         data_sp = batch_specs({"x": self.engine._x, "y": self.engine._y},
                               (), (axes,))
         self._x_spec, self._y_spec = data_sp["x"], data_sp["y"]
@@ -564,12 +596,64 @@ class ShardedPAOTA(FusedPAOTA):
             # draws are independent across shards (same shape, own stream)
             quant_key = lambda r: jax.random.fold_in(
                 round_tag_key(self._srv_key, r, TAG_QUANT), offset)
+        channel = lambda t: pad_slice(sample_channel_gains(
+            round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan), 0.0)
+
+        # fault streams: the SAME full-K draws the fused driver makes,
+        # sliced to this shard's rows (phantoms never fault)
+        fc = self.faults
+        if fc is not None and fc.has_payload_faults:
+            base_local, base_cohort = local_train, cohort_train
+
+            def local_train(global_state, x, y, r):          # noqa: F811
+                trained = base_local(global_state, x, y, r)
+                nm, bm = fault_payload_masks(self._lat_key, r, k, fc)
+                return inject_payload_faults(
+                    trained, global_state, pad_slice(nm, False),
+                    pad_slice(bm, False), fc)
+
+            def cohort_train(global_state, x, y, r, ids):    # noqa: F811
+                trained = base_cohort(global_state, x, y, r, ids)
+                nm, bm = fault_payload_masks(self._lat_key, r, k, fc)
+                if ph:
+                    # slot gids reach into the phantom pad: extend the
+                    # masks with never-faulting rows before the gather
+                    pad = jnp.zeros((ph,), bool)
+                    nm = jnp.concatenate([nm, pad])
+                    bm = jnp.concatenate([bm, pad])
+                gids = offset.astype(jnp.uint32) + ids.astype(jnp.uint32)
+                return inject_payload_faults(trained, global_state,
+                                             nm[gids], bm[gids], fc)
+        if fc is not None and fc.has_channel_faults:
+            base_chan = channel
+
+            def channel(t):                                  # noqa: F811
+                h = base_chan(t)
+                fade = pad_slice(fault_channel_mask(self._lat_key, t, k, fc),
+                                 False)
+                return jnp.where(fade, h * jnp.float32(fc.deep_fade_gain), h)
+        if fc is not None and fc.has_blackout:
+            # pod blackout composes into the scenario availability mask:
+            # the pod axes lead the client axes (constructor guard), so
+            # pod p owns the contiguous rows [p, p+1) * k_pad / n_pods
+            rows_per_pod = self.k_pad // self.n_pod_groups
+            blk_full = jnp.asarray(np.isin(
+                np.arange(self.k_pad) // rows_per_pod,
+                [int(p) for p in fc.pod_blackout]))
+            base_scen = scen_cb
+
+            def scen_cb(t):                                  # noqa: F811
+                blk = blackout_active(fc, t) & jax.lax.dynamic_slice(
+                    blk_full, (offset,), (k_loc,))
+                if base_scen is None:
+                    return ~blk, jnp.zeros_like(blk)
+                avail, drop = base_scen(t)
+                return avail & ~blk, drop
 
         return RoundStreams(
             local_train=local_train,
             latencies=lat,
-            channel=lambda t: pad_slice(sample_channel_gains(
-                round_tag_key(self._srv_key, t, TAG_CHANNEL), k, chan), 0.0),
+            channel=channel,
             noise_key=lambda t: round_tag_key(self._srv_key, t, TAG_NOISE),
             scenario=scen_cb,
             cohort_train=cohort_train if self.cohort_size else None,

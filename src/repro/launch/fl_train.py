@@ -52,6 +52,20 @@ realization is drawn at full leaf shapes so every TP layout consumes the
 same total noise, and the compiled program keeps exactly ONE cross-client
 model-sized psum — it gathers the TP blocks in the same op
 (EXPERIMENTS.md §Intra-client TP).
+
+Fault tolerance (fused/sharded; EXPERIMENTS.md §Fault tolerance):
+``--faults 'nan:0.05,start:1'`` injects counter-RNG client faults — NaN/
++Inf payload rows (``nan:``/``inf:``), Byzantine-scaled deltas (``byz:``
++ ``scale:``), deep-fade channel outliers (``fade:`` + ``gain:``), pod
+blackouts in grouped sharded mode (``pods:0|2`` + ``bstart:``/
+``bstop:``). ``--screen`` masks corrupt uploads out of the superposition
+(per-row containment, still ONE cross-client psum) with an optional
+``--screen-max-norm`` Byzantine fence; ``--divergence-factor F`` rolls
+the global back to the last-good slot on a post-update norm jump beyond
+F. ``--checkpoint-every N`` snapshots the FULL round carry every N
+rounds (``--checkpoint-dir``); ``--resume PATH`` restores one and
+continues the killed run bit-for-bit (counter RNG replays identical
+streams).
 """
 from examples.fl_noniid_mnist import main
 

@@ -1,0 +1,145 @@
+"""Non-finite-aggregate guard (ISSUE-10 satellite): a client whose upload
+carries NaN/Inf must never write into w_g.
+
+Pre-fix, ``guarded_global_update`` only guarded the ~0 normalizer: a
+non-finite aggregate (deep-fade overflow, a NaN local delta) sailed past
+the varsigma check and destroyed the global model. The fixed guard treats
+a poisoned period exactly like a zero-uploader period — w_g AND
+prev_global hold bit-identically — on the host, fused, and sharded
+drivers, in both transmit modes (mirrors tests/test_zero_uploader.py).
+
+The NaN source here is organic: one client's training data is poisoned
+with NaN, so its local SGD emits NaN weights and the uplink carries them
+— no screening configured, the aggregate-level guard is the only line of
+defense.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ChannelConfig, SchedulerConfig
+from repro.core.aggregation import guarded_global_update
+from repro.data.partition import partition_noniid
+from repro.data.pipeline import build_federation
+from repro.data.synthetic import make_mnist_like
+from repro.fl import FLClient, FusedPAOTA, PAOTAConfig, PAOTAServer
+from repro.models.mlp import init_mlp_params, mlp_loss
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def world():
+    x, y, _, _ = make_mnist_like(n_train=2000, n_test=10)
+    parts = partition_noniid(y, n_clients=K, seed=0)
+    return x, y, parts
+
+
+def _clients(world, poison: bool):
+    x, y, parts = world
+    fed = build_federation(x, y, parts)
+    if poison:
+        fed[0].x = np.full_like(fed[0].x, np.nan)
+    return [FLClient(d, mlp_loss, batch_size=32, lr=0.1, local_steps=5)
+            for d in fed]
+
+
+def _params():
+    return init_mlp_params(jax.random.PRNGKey(0))
+
+
+# fast latencies: every client (including the poisoned one) uploads every
+# period, so the guard faces a non-finite aggregate from round 1 on
+FAST_SCHED = dict(n_clients=K, delta_t=8.0, lat_lo=0.5, lat_hi=3.0)
+
+
+# ---------------------------------------------------------------------------
+# unit level
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta", [False, True])
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_guard_holds_on_nonfinite_aggregate(delta, bad):
+    g = jnp.arange(4, dtype=jnp.float32)
+    pg = g - 1.0
+    agg = g.at[2].set(bad)
+    ng, npg = guarded_global_update(g, pg, agg, jnp.float32(1.0),
+                                    delta=delta)
+    np.testing.assert_array_equal(np.asarray(ng), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(npg), np.asarray(pg))
+
+
+@pytest.mark.parametrize("delta", [False, True])
+def test_guard_passes_finite_aggregate(delta):
+    g = jnp.arange(4, dtype=jnp.float32)
+    pg = g - 1.0
+    agg = jnp.full((4,), 0.5, jnp.float32)
+    ng, npg = guarded_global_update(g, pg, agg, jnp.float32(1.0),
+                                    delta=delta)
+    want = g + agg if delta else agg
+    np.testing.assert_array_equal(np.asarray(ng), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(npg), np.asarray(g))
+
+
+def test_guard_nonfinite_pytree_leaf():
+    """One NaN leaf anywhere in a pytree aggregate holds EVERY leaf."""
+    g = {"w": jnp.ones((3,)), "b": jnp.zeros((2,))}
+    pg = {"w": jnp.zeros((3,)), "b": jnp.ones((2,))}
+    agg = {"w": jnp.full((3,), 2.0), "b": jnp.array([1.0, jnp.nan])}
+    ng, npg = guarded_global_update(g, pg, agg, jnp.float32(1.0))
+    for k in g:
+        np.testing.assert_array_equal(np.asarray(ng[k]), np.asarray(g[k]))
+        np.testing.assert_array_equal(np.asarray(npg[k]), np.asarray(pg[k]))
+
+
+# ---------------------------------------------------------------------------
+# driver level: host / fused / sharded, both transmit modes
+# ---------------------------------------------------------------------------
+
+def _assert_held(srv, n_rounds=3):
+    g0 = np.array(srv.global_vec, copy=True)
+    uploads = 0
+    for _ in range(n_rounds):
+        uploads += srv.round()["n_participants"]
+    assert uploads > 0          # the guard engaged, not a zero-uploader gap
+    np.testing.assert_array_equal(srv.global_vec, g0)
+    assert np.isfinite(srv.global_vec).all()
+
+
+@pytest.mark.parametrize("transmit", ["model", "delta"])
+def test_host_holds_global_on_nan_client(world, transmit):
+    srv = PAOTAServer(_params(), _clients(world, poison=True),
+                      ChannelConfig(), SchedulerConfig(seed=1, **FAST_SCHED),
+                      PAOTAConfig(transmit=transmit, engine="batched"))
+    _assert_held(srv)
+
+
+@pytest.mark.parametrize("transmit", ["model", "delta"])
+def test_fused_holds_global_on_nan_client(world, transmit):
+    srv = FusedPAOTA(_params(), _clients(world, poison=True),
+                     ChannelConfig(), SchedulerConfig(seed=1, **FAST_SCHED),
+                     PAOTAConfig(transmit=transmit))
+    _assert_held(srv)
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("transmit", ["model", "delta"])
+def test_sharded_holds_global_on_nan_client(world, transmit, client_mesh_8):
+    from repro.fl import ShardedPAOTA
+    srv = ShardedPAOTA(_params(), _clients(world, poison=True),
+                       ChannelConfig(), SchedulerConfig(seed=1, **FAST_SCHED),
+                       PAOTAConfig(transmit=transmit), mesh=client_mesh_8)
+    _assert_held(srv)
+
+
+def test_clean_run_still_progresses(world):
+    """Control: the same config without the poisoned client must update
+    w_g (the guard is a non-finite select, not a freeze)."""
+    srv = FusedPAOTA(_params(), _clients(world, poison=False),
+                     ChannelConfig(), SchedulerConfig(seed=1, **FAST_SCHED),
+                     PAOTAConfig())
+    g0 = np.array(srv.global_vec, copy=True)
+    srv.advance(2)
+    assert not np.array_equal(srv.global_vec, g0)
+    assert np.isfinite(srv.global_vec).all()
